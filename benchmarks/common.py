@@ -1,0 +1,23 @@
+"""Benchmark helpers: timed jit execution with warmup."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,54 @@
+"""Paper Fig 2: wall time vs number of machines M (|V|, |E| fixed).
+
+The paper's T(M) = T_phase1(E/M) + (log M) * T_merge + T_final. On the 1-core
+container we measure each stage's single-machine wall time at the exact
+per-machine shard sizes — the same quantity the paper plots (their cluster
+time is the max over machines of stage time, which is what one machine's
+stage time measures under balanced random partition).
+
+Scaled-down operating point (CPU): |V|=2000, |E|=200k (paper: 1e5/1e7 —
+same E/V density ratio of 100).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.core.bridges_host import bridges_dfs
+from repro.core.certificate import certificate_capacity, sparse_certificate
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList, pad_edges
+
+V, E = 2000, 200_000
+
+
+def run(out):
+    src, dst = gen.random_graph(V, E, seed=0)
+    e_real = len(src)
+    cert_fn = jax.jit(lambda el: sparse_certificate(el))
+
+    # merge phase cost: certificate over a 2-certificate union (fixed shape)
+    cap2 = 2 * certificate_capacity(V)
+    el_merge = pad_edges(EdgeList.from_arrays(src[:cap2], dst[:cap2], V), cap2)
+    t_merge = timeit(cert_fn, el_merge)
+
+    full_cert = sparse_certificate(EdgeList.from_arrays(src, dst, V))
+    cs, cd = full_cert.to_numpy()
+    import time as _t
+    t0 = _t.perf_counter()
+    bridges_dfs(cs, cd, V)
+    t_final = _t.perf_counter() - t0
+
+    for m in (1, 2, 4, 8, 16, 32, 64):
+        shard = max(e_real // m, 1)
+        el = EdgeList.from_arrays(src[:shard], dst[:shard], V)
+        t_phase1 = timeit(cert_fn, el)
+        phases = int(np.ceil(np.log2(m))) if m > 1 else 0
+        total = t_phase1 + phases * t_merge + t_final
+        out.append(csv_row(
+            f"fig2/M={m}", total,
+            f"phase1={t_phase1*1e3:.1f}ms merge={phases}x{t_merge*1e3:.1f}ms "
+            f"final={t_final*1e3:.1f}ms V={V} E={e_real}",
+        ))
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig 3: wall time vs |V| at fixed |E|, M fixed (=10 in the paper).
+
+Shows the V*log(M) merge term take over as the graph gets sparser."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import csv_row, timeit
+from repro.core.certificate import sparse_certificate
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+
+E, M = 100_000, 10
+
+
+def run(out):
+    cert_fn = jax.jit(lambda el: sparse_certificate(el))
+    for v in (500, 1000, 2000, 4000, 8000):
+        src, dst = gen.random_graph(v, E, seed=1)
+        shard = max(len(src) // M, 1)
+        el = EdgeList.from_arrays(src[:shard], dst[:shard], v)
+        t_phase1 = timeit(cert_fn, el)
+        # merge phases dominate in V: certificate of a 4(n-1)-edge union
+        el_m = EdgeList.from_arrays(
+            src[: 4 * (v - 1)], dst[: 4 * (v - 1)], v
+        )
+        t_merge = timeit(cert_fn, el_m)
+        phases = int(np.ceil(np.log2(M)))
+        total = t_phase1 + phases * t_merge
+        out.append(csv_row(f"fig3/V={v}", total,
+                           f"phase1={t_phase1*1e3:.1f}ms "
+                           f"merge={phases}x{t_merge*1e3:.1f}ms E={E} M={M}"))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Fig 4: wall time vs |E| at fixed |V|, M=10 — the dense-graph regime
+the algorithm targets: time grows ~linearly in E/M while the merge/final
+terms stay constant."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import csv_row, timeit
+from repro.core.certificate import sparse_certificate
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+
+V, M = 2000, 10
+
+
+def run(out):
+    cert_fn = jax.jit(lambda el: sparse_certificate(el))
+    for e in (50_000, 100_000, 200_000, 400_000, 800_000):
+        src, dst = gen.random_graph(V, e, seed=2)
+        shard = max(len(src) // M, 1)
+        el = EdgeList.from_arrays(src[:shard], dst[:shard], V)
+        t_phase1 = timeit(cert_fn, el)
+        el_m = EdgeList.from_arrays(src[: 4 * (V - 1)], dst[: 4 * (V - 1)], V)
+        t_merge = timeit(cert_fn, el_m)
+        phases = int(np.ceil(np.log2(M)))
+        total = t_phase1 + phases * t_merge
+        out.append(csv_row(f"fig4/E={e}", total,
+                           f"phase1={t_phase1*1e3:.1f}ms V={V} M={M}"))
+    return out

@@ -1,0 +1,38 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+    PYTHONPATH=src python -m benchmarks.run             # all paper figures
+    PYTHONPATH=src python -m benchmarks.run --only fig2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,fig4,fig5")
+    args = ap.parse_args()
+    which = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import fig2_machines, fig3_vertices, fig4_edges, fig5_baseline
+
+    benches = {
+        "fig2": fig2_machines.run,
+        "fig3": fig3_vertices.run,
+        "fig4": fig4_edges.run,
+        "fig5": fig5_baseline.run,
+    }
+    out: list[str] = ["name,us_per_call,derived"]
+    for name, fn in benches.items():
+        if which and name not in which:
+            continue
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        fn(out)
+    print("\n".join(out), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""The paper's technique inside a GNN data pipeline (arch-applicability):
+
+  1. run core.find_bridges on the input graph -> report failure-point edges;
+  2. build the 2-edge-connectivity sparse certificate as a connectivity-
+     preserving SPARSIFIER;
+  3. train GraphSAGE on the certificate graph and on the full graph —
+     same connectivity structure at a fraction of the edges.
+
+    PYTHONPATH=src python examples/gnn_certificate.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bridges_from_edgelist, sparse_certificate
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+from repro.models.gnn import GNNConfig, init_gnn
+from repro.models.transformer import Parallelism
+from repro.optim.adamw import adamw_init
+from repro.training import make_gnn_train_step
+
+
+def make_graph_batch(src, dst, n, d_feat, n_classes, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "feats": jnp.asarray(rng.normal(size=(n, d_feat)).astype(np.float32)),
+        "src": jnp.asarray(src), "dst": jnp.asarray(dst),
+        "mask": jnp.ones(len(src), bool),
+        "labels": jnp.asarray(rng.integers(0, n_classes, n).astype(np.int32)),
+        "label_mask": jnp.ones(n, bool),
+    }
+
+
+def train(g, cfg, steps=30):
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_gnn_train_step(cfg, Parallelism.none(), mode="full"))
+    t0 = time.time()
+    for _ in range(steps):
+        params, opt, metrics = step(params, opt, g)
+    jax.block_until_ready(metrics["loss"])
+    return float(metrics["loss"]), (time.time() - t0) / steps
+
+
+def main():
+    n, m = 3_000, 120_000
+    src, dst, planted = gen.planted_bridge_graph(n, m, n_bridges=5, seed=1)
+    el = EdgeList.from_arrays(src, dst, n)
+
+    # paper technique: failure-point report + certificate sparsifier
+    cert = sparse_certificate(el)
+    bridges = bridges_from_edgelist(cert)
+    print(f"graph |V|={n} |E|={len(src)}: {len(bridges)} failure-point edges "
+          f"(planted {len(planted)}) -> flag for resilience review")
+    cs, cd = cert.to_numpy()
+    print(f"certificate sparsifier: {len(cs)} edges "
+          f"({len(src) / len(cs):.1f}x fewer)")
+
+    cfg = GNNConfig("sage", "graphsage", n_layers=2, d_hidden=64,
+                    d_feat=32, n_classes=8)
+    g_full = make_graph_batch(src, dst, n, 32, 8)
+    g_cert = make_graph_batch(cs, cd, n, 32, 8)
+    loss_f, t_f = train(g_full, cfg)
+    loss_c, t_c = train(g_cert, cfg)
+    print(f"GraphSAGE 30 steps: full graph loss {loss_f:.3f} "
+          f"({t_f*1e3:.0f} ms/step) | certificate loss {loss_c:.3f} "
+          f"({t_c*1e3:.0f} ms/step, {t_f/t_c:.1f}x faster)")
+
+
+if __name__ == "__main__":
+    main()

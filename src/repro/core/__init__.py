@@ -1,0 +1,27 @@
+# The paper's primary contribution: parallel bridge finding in dense graphs
+# via distributed sparse certificates (Kumar & Singh, CS.DC 2021).
+from repro.core.api import find_bridges
+from repro.core.bridges_device import bridge_mask_device, bridges_device
+from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
+from repro.core.certificate import (
+    certificate_capacity,
+    merge_certificates,
+    sparse_certificate,
+)
+from repro.core.forest import connected_components, spanning_forest
+from repro.core.merge import build_distributed_bridges_fn, merged_certificate
+
+__all__ = [
+    "find_bridges",
+    "bridges_device",
+    "bridge_mask_device",
+    "bridges_dfs",
+    "bridges_from_edgelist",
+    "sparse_certificate",
+    "merge_certificates",
+    "certificate_capacity",
+    "spanning_forest",
+    "connected_components",
+    "build_distributed_bridges_fn",
+    "merged_certificate",
+]

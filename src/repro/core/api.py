@@ -1,0 +1,78 @@
+"""Public API for the paper's algorithm.
+
+    from repro.core import find_bridges
+    bridges = find_bridges(src, dst, n_nodes)                       # single device
+    bridges = find_bridges(src, dst, n_nodes, mesh=mesh,
+                           machine_axes=("data", "model"),
+                           schedule="paper", final="host")          # distributed
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bridges_device import bridges_device
+from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
+from repro.core.certificate import sparse_certificate
+from repro.core.merge import build_distributed_bridges_fn
+from repro.core.partition import partition_edges
+from repro.graph.datastructs import EdgeList
+
+
+def find_bridges(
+    src,
+    dst,
+    n_nodes: int,
+    *,
+    mesh=None,
+    machine_axes=None,
+    schedule: str = "paper",
+    final: str = "host",
+    merge: str = "recertify",
+    seed: int = 0,
+) -> set[tuple[int, int]]:
+    """Find all bridges of the undirected graph (src[i], dst[i]).
+
+    Single-device mode (mesh=None): sparse certificate then the final stage
+    (host Tarjan DFS or device PRAM extraction).
+
+    Distributed mode: partition edges over the mesh "machines", per-machine
+    certificates, merge phases, final stage — the paper's full pipeline.
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+
+    if mesh is None:
+        el = EdgeList.from_arrays(src, dst, n_nodes)
+        cert = sparse_certificate(el)
+        if final == "host":
+            return bridges_from_edgelist(cert)
+        out = bridges_device(cert)
+        s, d = out.to_numpy()
+        return set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
+
+    if machine_axes is None:
+        machine_axes = tuple(mesh.axis_names)
+    m = math.prod(mesh.shape[a] for a in (
+        (machine_axes,) if isinstance(machine_axes, str) else machine_axes
+    ))
+    psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m, seed=seed)
+    fn = build_distributed_bridges_fn(mesh, machine_axes, n_nodes, schedule,
+                                      final, merge)
+    with jax.set_mesh(mesh):
+        osrc, odst, omask = jax.jit(fn)(
+            jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask)
+        )
+    # machine 0 (paper) — or any machine under xor/hierarchical — holds the answer
+    osrc = np.asarray(osrc)[0]
+    odst = np.asarray(odst)[0]
+    omask = np.asarray(omask)[0]
+    if final == "host":
+        return bridges_dfs(osrc[omask], odst[omask], n_nodes)
+    return set(
+        (int(min(a, b)), int(max(a, b)))
+        for a, b in zip(osrc[omask], odst[omask])
+    )

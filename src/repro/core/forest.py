@@ -1,0 +1,119 @@
+"""Spanning forest in pure JAX — the TPU-native replacement for the paper's
+sequential DFS + union-find certificate pass.
+
+Borůvka-style minimum-edge hooking with pointer-doubling contraction:
+
+  repeat O(log V) times:
+    1. every component picks its minimum-index incident cross edge
+       (``segment_min`` over both endpoints' component labels)
+    2. components hook along the picked edge; mutual 2-cycles (the only
+       possible cycles under distinct edge keys) are broken by id order
+    3. labels are flattened by pointer doubling
+
+Each selected edge that survives hooking joins the forest. Distinct edge
+indices act as distinct weights, so the classic Borůvka argument gives an
+acyclic, component-spanning edge set.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.graph.datastructs import INF32, INT, EdgeList
+
+
+def _ceil_log2(n: int) -> int:
+    return max(1, math.ceil(math.log2(max(n, 2))))
+
+
+def _shortcut(parent: jax.Array, steps: int) -> jax.Array:
+    """Full pointer-doubling path compression."""
+    def body(_, p):
+        return p[p]
+    return lax.fori_loop(0, steps, body, parent)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _forest_impl(src, dst, mask, n: int, init_labels=None):
+    """Borůvka hooking. ``init_labels`` warm-starts from an existing
+    partition (path-compressed component labels): the returned forest then
+    contains only edges that merge ACROSS the initial components — the
+    incremental-merge primitive (see certificate.merge_certificates_
+    incremental). Rounds are data-dependent (convergence-tested while loop,
+    bounded by log2(n)+2); the round count is returned for the measured
+    roofline model."""
+    E = src.shape[0]
+    eidx = jnp.arange(E, dtype=INT)
+    log_n = _ceil_log2(n)
+    # Self-loops are never cross edges; masked slots never participate.
+    valid = mask & (src != dst)
+
+    def cond(state):
+        _, _, changed, rounds = state
+        return changed & (rounds < log_n + 2)
+
+    def body(state):
+        labels, forest, _, rounds = state
+        lu = labels[src]
+        lv = labels[dst]
+        cross = (lu != lv) & valid
+        key = jnp.where(cross, eidx, INF32)
+        best_u = jax.ops.segment_min(key, lu, num_segments=n)
+        best_v = jax.ops.segment_min(key, lv, num_segments=n)
+        best = jnp.minimum(best_u, best_v)  # [n] per-component best edge
+        has = best < INF32
+        e = jnp.where(has, best, 0)
+        cu = lu[e]
+        cv = lv[e]
+        comp = jnp.arange(n, dtype=INT)
+        other = jnp.where(cu == comp, cv, cu)
+        prop = jnp.where(has, other, comp)
+        # distinct edge keys => only 2-cycles possible; break them by id order
+        mutual = prop[prop] == comp
+        hook = has & (~mutual | (comp < prop))
+        parent = jnp.where(hook, prop, comp)
+        chosen = jnp.where(hook, e, E)  # E is an out-of-range sentinel
+        forest = forest.at[chosen].set(True, mode="drop")
+        parent = _shortcut(parent, log_n)
+        labels = parent[labels]
+        changed = jnp.any(hook)
+        return labels, forest, changed, rounds + 1
+
+    labels0 = (jnp.arange(n, dtype=INT) if init_labels is None
+               else init_labels.astype(INT))
+    forest0 = jnp.zeros((E,), bool)
+    labels, forest, _, rounds = lax.while_loop(
+        cond, body, (labels0, forest0, jnp.bool_(True), jnp.int32(0))
+    )
+    return forest, labels, rounds
+
+
+def spanning_forest(edges: EdgeList):
+    """Returns (forest_mask bool[E], labels int32[n]).
+
+    ``forest_mask`` selects a spanning forest of the masked subgraph;
+    ``labels`` maps each vertex to its connected-component representative.
+    """
+    forest, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
+                                     edges.n_nodes)
+    return forest, labels
+
+
+def spanning_forest_ex(edges: EdgeList, init_labels=None):
+    """(forest_mask, labels, rounds_used); optional warm-start labels.
+
+    With ``init_labels`` the forest spans only the *contraction* of the
+    initial partition by the edge set (edges internal to an initial
+    component are never selected)."""
+    return _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes,
+                        init_labels=init_labels)
+
+
+def connected_components(edges: EdgeList):
+    """Component labels only (same hooking machinery)."""
+    _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+    return labels

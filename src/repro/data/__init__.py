@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    GraphBatches,
+    SyntheticTokens,
+    recsys_batches,
+)
+from repro.data.sampler import NeighborSampler
+
+__all__ = ["SyntheticTokens", "GraphBatches", "recsys_batches", "NeighborSampler"]

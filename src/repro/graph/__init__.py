@@ -1,0 +1,4 @@
+from repro.graph.datastructs import EdgeList, compact_edges, pad_edges
+from repro.graph import generators
+
+__all__ = ["EdgeList", "compact_edges", "pad_edges", "generators"]

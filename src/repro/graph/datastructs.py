@@ -1,0 +1,121 @@
+"""Fixed-shape graph containers.
+
+Everything in the distributed graph engine runs on *fixed-capacity* edge
+buffers with a validity mask so that every merge phase / shard has identical
+shapes and the whole algorithm lowers into a single XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT = jnp.int32
+INF32 = np.iinfo(np.int32).max
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "mask"],
+    meta_fields=["n_nodes"],
+)
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """Padded undirected edge list.
+
+    src, dst : int32[capacity]   endpoints (arbitrary values where ~mask)
+    mask     : bool[capacity]    which slots hold real edges
+    n_nodes  : int               static vertex count
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    mask: jax.Array
+    n_nodes: int
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(INT))
+
+    @staticmethod
+    def from_arrays(src, dst, n_nodes: int, capacity: int | None = None) -> "EdgeList":
+        src = jnp.asarray(src, INT)
+        dst = jnp.asarray(dst, INT)
+        mask = jnp.ones(src.shape, bool)
+        el = EdgeList(src, dst, mask, n_nodes)
+        if capacity is not None and capacity != el.capacity:
+            el = pad_edges(el, capacity)
+        return el
+
+    def to_numpy(self):
+        """Host copy: (src, dst) of the valid edges only."""
+        m = np.asarray(self.mask)
+        return np.asarray(self.src)[m], np.asarray(self.dst)[m]
+
+
+def pad_edges(edges: EdgeList, capacity: int) -> EdgeList:
+    """Grow (or shrink, asserting no real edge loss) to `capacity` slots."""
+    cur = edges.capacity
+    if capacity == cur:
+        return edges
+    if capacity > cur:
+        pad = capacity - cur
+        z = jnp.zeros((pad,), INT)
+        return EdgeList(
+            jnp.concatenate([edges.src, z]),
+            jnp.concatenate([edges.dst, z]),
+            jnp.concatenate([edges.mask, jnp.zeros((pad,), bool)]),
+            edges.n_nodes,
+        )
+    # Shrink: compact first so valid edges are at the front.
+    c = compact_edges(edges, capacity)
+    return c
+
+
+def compact_edges(edges: EdgeList, capacity: int, keep: jax.Array | None = None) -> EdgeList:
+    """Scatter the selected edges to the front of a fresh `capacity`-slot buffer.
+
+    O(E) cumsum + scatter (no sort). Edges beyond `capacity` are dropped, so the
+    caller must guarantee the selection fits (certificates are bounded by
+    construction).
+    """
+    sel = edges.mask if keep is None else (edges.mask & keep)
+    pos = jnp.cumsum(sel.astype(INT)) - 1
+    idx = jnp.where(sel, pos, capacity)  # out-of-range -> dropped
+    out_src = jnp.zeros((capacity,), INT).at[idx].set(edges.src, mode="drop")
+    out_dst = jnp.zeros((capacity,), INT).at[idx].set(edges.dst, mode="drop")
+    out_mask = jnp.zeros((capacity,), bool).at[idx].set(True, mode="drop")
+    return EdgeList(out_src, out_dst, out_mask, edges.n_nodes)
+
+
+def concat_edges(a: EdgeList, b: EdgeList) -> EdgeList:
+    assert a.n_nodes == b.n_nodes
+    return EdgeList(
+        jnp.concatenate([a.src, b.src]),
+        jnp.concatenate([a.dst, b.dst]),
+        jnp.concatenate([a.mask, b.mask]),
+        a.n_nodes,
+    )
+
+
+def build_csr(src: np.ndarray, dst: np.ndarray, n_nodes: int):
+    """Host-side CSR over the *symmetrized* edge list: (indptr, indices, edge_id).
+
+    Used by the neighbor sampler and the host DFS oracle.
+    """
+    e = len(src)
+    asrc = np.concatenate([src, dst])
+    adst = np.concatenate([dst, src])
+    eid = np.concatenate([np.arange(e), np.arange(e)])
+    order = np.lexsort((adst, asrc))
+    asrc, adst, eid = asrc[order], adst[order], eid[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, asrc + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, adst.astype(np.int32), eid.astype(np.int32)

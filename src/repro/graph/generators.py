@@ -1,0 +1,99 @@
+"""Graph generators (host-side numpy; deterministic by seed).
+
+Simple graphs (no self loops / parallel edges) are used for oracle
+comparisons against networkx; the engine itself also handles multigraphs
+(tested separately).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def random_graph(n: int, m: int, seed: int = 0, simple: bool = True):
+    """m undirected edges over n vertices. Dense-friendly (m up to n*(n-1)/2)."""
+    rng = np.random.default_rng(seed)
+    max_m = n * (n - 1) // 2
+    if simple:
+        m = min(m, max_m)
+        # Sample edge ranks without replacement from the upper triangle.
+        ranks = rng.choice(max_m, size=m, replace=False)
+        # rank -> (u, v): u = row via triangular-number inversion
+        u = (np.floor((1 + np.sqrt(1 + 8 * ranks.astype(np.float64))) / 2)).astype(np.int64)
+        # fix float rounding
+        tri = u * (u - 1) // 2
+        too_big = tri > ranks
+        u = u - too_big.astype(np.int64)
+        tri = u * (u - 1) // 2
+        v = ranks - tri
+        src, dst = v.astype(np.int32), u.astype(np.int32)
+    else:
+        src = rng.integers(0, n, size=m).astype(np.int32)
+        dst = rng.integers(0, n, size=m).astype(np.int32)
+    return src, dst
+
+
+def planted_bridge_graph(n: int, m: int, n_bridges: int, seed: int = 0):
+    """Connected graph = chain of (n_bridges+1) dense random blobs joined by
+    single edges (the planted bridges). Returns (src, dst, bridges_set)."""
+    rng = np.random.default_rng(seed)
+    k = n_bridges + 1
+    sizes = np.full(k, n // k)
+    sizes[: n % k] += 1
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    srcs, dsts = [], []
+    m_inner = max(m - n_bridges, 0)
+    for b in range(k):
+        nb, s0 = int(sizes[b]), int(starts[b])
+        mb = m_inner // k
+        if nb >= 2:
+            # spanning path to guarantee blob connectivity (path edges are NOT
+            # bridges of G only if extra edges cover them; add a cycle to be safe)
+            perm = rng.permutation(nb) + s0
+            srcs.append(perm[:-1]); dsts.append(perm[1:])
+            srcs.append(perm[-1:]); dsts.append(perm[:1])  # close the cycle
+            if nb >= 3 and mb > 0:
+                u = rng.integers(0, nb, mb) + s0
+                v = rng.integers(0, nb, mb) + s0
+                keep = u != v
+                srcs.append(u[keep]); dsts.append(v[keep])
+    bridges = set()
+    for b in range(k - 1):
+        u = int(starts[b] + rng.integers(0, sizes[b]))
+        v = int(starts[b + 1] + rng.integers(0, sizes[b + 1]))
+        srcs.append(np.array([u])); dsts.append(np.array([v]))
+        bridges.add((min(u, v), max(u, v)))
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    # dedup to a simple graph (keeps planted bridges: they are unique by constr.)
+    key = np.minimum(src, dst).astype(np.int64) * n + np.maximum(src, dst)
+    _, idx = np.unique(key, return_index=True)
+    return src[idx], dst[idx], bridges
+
+
+def barbell(n_side: int, path_len: int):
+    """Two cliques joined by a path: every path edge is a bridge."""
+    src, dst = [], []
+    for off in (0, n_side + path_len):
+        for i in range(n_side):
+            for j in range(i + 1, n_side):
+                src.append(off + i); dst.append(off + j)
+    prev = n_side - 1
+    bridges = set()
+    for p in range(path_len):
+        nxt = n_side + p
+        src.append(prev); dst.append(nxt)
+        bridges.add((min(prev, nxt), max(prev, nxt)))
+        prev = nxt
+    nxt = n_side + path_len  # first vertex of second clique
+    src.append(prev); dst.append(nxt)
+    bridges.add((min(prev, nxt), max(prev, nxt)))
+    n = 2 * n_side + path_len
+    return np.array(src, np.int32), np.array(dst, np.int32), bridges, n
+
+
+def tree_graph(n: int, seed: int = 0):
+    """Random tree: every edge is a bridge."""
+    rng = np.random.default_rng(seed)
+    dst = np.arange(1, n, dtype=np.int32)
+    src = np.array([rng.integers(0, i) for i in range(1, n)], np.int32)
+    return src, dst

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   segment_min     — the Borůvka hooking reduction (the paper's certificate
+#                     inner loop) + GNN-style reduce-by-key
+#   flash_attention — blocked online-softmax attention (LM archs)
+#   embedding_bag   — ragged gather+pool over big tables (recsys)
+#
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# public wrapper with interpret fallback), ref.py (pure-jnp oracle).

@@ -1,0 +1,22 @@
+"""Public embedding_bag op (EmbeddingBag for JAX; see ref.py)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(table, indices, mask=None, mode: str = "sum",
+                  use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return embedding_bag_pallas(
+            table, indices, mask=mask, mode=mode, interpret=not _on_tpu()
+        )
+    return embedding_bag_ref(table, indices, mask=mask, mode=mode)

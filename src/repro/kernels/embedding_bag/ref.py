@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for embedding_bag (gather + masked pool).
+
+JAX has no native EmbeddingBag (taxonomy B.6/B.11): this take+reduce IS the
+reference implementation the recsys substrate builds on.
+"""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, mask=None, mode: str = "sum"):
+    """table: [V, D]; indices: int32[B, L]; mask: bool[B, L] -> [B, D]."""
+    g = jnp.take(table, indices, axis=0)  # [B, L, D]
+    if mask is None:
+        mask = jnp.ones(indices.shape, bool)
+    m = mask[..., None].astype(table.dtype)
+    if mode == "sum":
+        return jnp.sum(g * m, axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(m, axis=1), 1)
+        return jnp.sum(g * m, axis=1) / cnt
+    if mode == "max":
+        neg = jnp.finfo(table.dtype).min
+        out = jnp.max(jnp.where(mask[..., None], g, neg), axis=1)
+        # empty bags pool to zero (torch.nn.EmbeddingBag convention)
+        empty = ~jnp.any(mask, axis=1)
+        return jnp.where(empty[:, None], 0.0, out)
+    raise ValueError(mode)

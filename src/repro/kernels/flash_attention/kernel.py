@@ -1,0 +1,133 @@
+"""Pallas TPU flash attention (blocked online softmax), causal + GQA.
+
+Tiling: grid = (batch*q_heads, num_q_blocks, num_kv_blocks); KV innermost so
+the (Q_BLOCK, D) query tile, the running max/denominator, and the output
+accumulator stay resident in VMEM while KV tiles stream through. Block shapes
+are MXU-aligned: Q_BLOCK x D and KV_BLOCK x D with D a multiple of 128 for
+the assigned archs (d_head = 128).
+
+Causal handling: per-block iota compare; blocks entirely above the diagonal
+contribute all-NEG_INF rows which the online softmax absorbs (branch-free
+HLO; a production scheduler would also skip those grid cells via
+dimension_semantics, noted in DESIGN.md §Perf).
+
+GQA: q head h reads kv head h // group_size via the BlockSpec index map —
+no KV replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 128
+KV_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, kv_len, kv_offset):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [Q_BLOCK, D]
+    k = k_ref[0].astype(jnp.float32)  # [KV_BLOCK, D]
+    v = v_ref[0].astype(jnp.float32)  # [KV_BLOCK, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [Q_BLOCK, KV_BLOCK]
+
+    q_blk, kv_blk = s.shape
+    q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kv_pos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_pos < kv_len  # KV padding mask
+    if causal:
+        # decode/chunked-prefill alignment: query row r attends kv positions
+        # <= kv_offset + r (kv_offset = kv_len - q_len for self-attention)
+        mask &= kv_pos <= q_pos + kv_offset
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [Q_BLOCK, 1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)  # [Q_BLOCK, KV_BLOCK]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "interpret", "q_block", "kv_block")
+)
+def flash_attention_pallas(
+    q, k, v, causal: bool = True, scale: float | None = None,
+    interpret: bool = False, q_block: int = Q_BLOCK, kv_block: int = KV_BLOCK,
+):
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    Sq may be < Skv (decode / chunked prefill): causal masking aligns the
+    last query row with the last kv position.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    q_blk = min(q_block, pl.cdiv(sq, 8) * 8 if sq < q_block else q_block)
+    kv_blk = min(kv_block, pl.cdiv(skv, 8) * 8 if skv < kv_block else kv_block)
+    sq_pad = pl.cdiv(sq, q_blk) * q_blk
+    skv_pad = pl.cdiv(skv, kv_blk) * kv_blk
+    # layout: [B*H, S, D] so the head dim rides the grid
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * hkv, skv, d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * hkv, skv, d)
+    if sq_pad != sq:
+        qt = jnp.pad(qt, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        kt = jnp.pad(kt, ((0, 0), (0, skv_pad - skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, skv_pad - skv), (0, 0)))
+
+    grid = (b * hq, sq_pad // q_blk, skv_pad // kv_blk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        kv_len=skv,
+        kv_offset=skv - sq,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :sq].reshape(b, hq, sq, d)
+    return jnp.moveaxis(out, 1, 2)

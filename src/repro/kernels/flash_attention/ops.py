@@ -1,0 +1,24 @@
+"""Public flash-attention op: Pallas kernel on TPU, jnp reference elsewhere
+(interpret mode is used by the correctness tests; the CPU smoke/train paths
+use the reference, which XLA:CPU fuses adequately)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, interpret=not _on_tpu()
+        )
+    return attention_ref(q, k, v, causal=causal, scale=scale)

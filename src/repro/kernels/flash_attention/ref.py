@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for (causal, GQA) attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: [B, S, Hq, D]; k, v: [B, S, Hkv, D]; Hq % Hkv == 0. fp32 math."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

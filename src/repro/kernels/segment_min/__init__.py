@@ -1,0 +1,3 @@
+from repro.kernels.segment_min.ops import segment_min
+
+__all__ = ["segment_min"]

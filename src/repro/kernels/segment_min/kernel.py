@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: unsorted segment-min over a bounded id space.
+
+This is the Borůvka hooking reduction — the inner loop of the paper's
+certificate pass (each component picks its minimum incident cross edge).
+
+TPU adaptation: there are no scatter atomics on the VPU, and the certificate
+phases have E = O(n), so instead of a scattered reduction we run a dense
+masked min over (edge-tile x segment-tile) blocks:
+
+    grid = (num_segment_tiles, num_edge_tiles)        # segment-major
+    block (j, i):  partial[s] = min over t of
+                   where(ids[t] == seg_base_j + s, keys[t], INF)
+
+The output block j stays resident in VMEM across the inner edge-tile loop
+(revisited-accumulator pattern), so HBM traffic is E·(keys+ids) reads + N
+writes. Compare work E·N masked ops vs a sort-based reduce's E·log E shuffle
+passes: for the merge phases (E <= 4(n-1)) the dense form wins on the VPU's
+8x128 lanes; DESIGN.md §Perf quantifies the crossover.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graph.datastructs import INF32
+
+# VPU-aligned tiles: edges per block x segments per block
+EDGE_BLOCK = 1024
+SEG_BLOCK = 512
+
+
+def _segment_min_kernel(keys_ref, ids_ref, out_ref):
+    j = pl.program_id(0)  # segment tile (outer)
+    i = pl.program_id(1)  # edge tile (inner, sequential on TPU)
+    keys = keys_ref[...]  # [EDGE_BLOCK]
+    ids = ids_ref[...]  # [EDGE_BLOCK]
+    seg_base = j * SEG_BLOCK
+    # [EDGE_BLOCK, SEG_BLOCK] masked compare on the VPU
+    seg_ids = seg_base + jax.lax.broadcasted_iota(jnp.int32, (1, SEG_BLOCK), 1)
+    masked = jnp.where(ids[:, None] == seg_ids, keys[:, None], INF32)
+    partial = jnp.min(masked, axis=0)  # [SEG_BLOCK]
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full((SEG_BLOCK,), INF32, jnp.int32)
+
+    out_ref[...] = jnp.minimum(out_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def segment_min_pallas(
+    keys: jax.Array, ids: jax.Array, num_segments: int, interpret: bool = False
+) -> jax.Array:
+    """keys, ids: int32[E] -> int32[num_segments] (INF32 for empty segments).
+
+    Invalid/masked edges should carry keys == INF32 (they then never win) or
+    ids pointing at a dump segment.
+    """
+    e = keys.shape[0]
+    e_pad = pl.cdiv(e, EDGE_BLOCK) * EDGE_BLOCK
+    n_pad = pl.cdiv(num_segments, SEG_BLOCK) * SEG_BLOCK
+    if e_pad != e:
+        keys = jnp.pad(keys, (0, e_pad - e), constant_values=INF32)
+        # padded ids point inside range but their keys are INF -> harmless
+        ids = jnp.pad(ids, (0, e_pad - e), constant_values=0)
+
+    grid = (n_pad // SEG_BLOCK, e_pad // EDGE_BLOCK)
+    out = pl.pallas_call(
+        _segment_min_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EDGE_BLOCK,), lambda j, i: (i,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((SEG_BLOCK,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(keys, ids)
+    return out[:num_segments]

@@ -1,0 +1,25 @@
+"""Public segment_min op: Pallas kernel on TPU, interpret-mode kernel or the
+jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.segment_min.kernel import segment_min_pallas
+from repro.kernels.segment_min.ref import segment_min_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_min(keys, ids, num_segments: int, use_pallas: bool | None = None):
+    """min(keys) per segment id; empty segments -> INF32.
+
+    use_pallas: force kernel (interpret-mode off-TPU); default: kernel on TPU,
+    jnp scatter-min elsewhere (faster than interpret mode on CPU).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return segment_min_pallas(keys, ids, num_segments, interpret=not _on_tpu())
+    return segment_min_ref(keys, ids, num_segments)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for segment_min."""
+import jax
+import jax.numpy as jnp
+
+from repro.graph.datastructs import INF32
+
+
+def segment_min_ref(keys: jax.Array, ids: jax.Array, num_segments: int) -> jax.Array:
+    """min of int32 ``keys`` grouped by ``ids``; empty segments get INF32."""
+    return jax.ops.segment_min(keys, ids, num_segments=num_segments).astype(jnp.int32)

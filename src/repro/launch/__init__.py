@@ -1,0 +1,3 @@
+# Launch: production mesh builders, multi-pod dry-run, training/serving
+# drivers. dryrun.py must be executed as a script/module so its XLA_FLAGS
+# device-count override lands before jax initializes.

@@ -1,0 +1,95 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Sources:
+  * compiled.cost_analysis()  -> HLO flops / bytes accessed (per device,
+    post-SPMD-partitioning module)
+  * compiled.as_text()        -> collective ops; cost_analysis does NOT count
+    collective bytes, so we parse every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute and sum payload bytes.
+
+Payload convention (documented in EXPERIMENTS.md): per-op payload = max(sum
+of operand bytes, result bytes) — the ring-algorithm wire cost is within 2x
+of this for every op above, which is inside the error the roofline needs.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (set in HW below; every report cites them).
+"""
+from __future__ import annotations
+
+import re
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum payload bytes per collective kind from (post-SPMD) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match `<result_shape> <name> = collective-kind(...)` instruction lines
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        result_bytes = _shape_bytes(m.group(1))
+        # operand shapes appear in the call args
+        args = s[m.end():]
+        operand_bytes = _shape_bytes(args)
+        out[kind] += max(result_bytes, operand_bytes)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int) -> dict:
+    """Three roofline terms in seconds (per-device quantities in, seconds out).
+
+    cost_analysis flops/bytes are already per-device (post-partition module);
+    collective bytes are per-device wire traffic.
+    """
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cbytes = float(coll["total_bytes"])
+    t_compute = flops / HW["peak_flops"]
+    t_memory = bytes_accessed / HW["hbm_bw"]
+    t_collective = cbytes / HW["ici_bw"]
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": cbytes,
+        "n_chips": n_chips,
+    }
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_collective), key=lambda kv: kv[1])
+    terms["dominant"] = dom[0]
+    bound = max(t_compute, t_memory, t_collective)
+    terms["roofline_fraction"] = (t_compute / bound) if bound > 0 else 0.0
+    return terms

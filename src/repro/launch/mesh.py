@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run sets its device-count override first.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model), 256 chips.
+    Multi-pod: (2, 16, 16) = (pod, data, model), 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pp_mesh(*, multi_pod: bool = False):
+    """Pipeline-parallel mesh variant: (pipe, data, model).
+
+    Single pod: (4, 4, 16) = 256 chips, 4 pipeline stages.
+    Multi-pod:  (8, 4, 16) = 512 chips — the pipe axis SPANS pods: stage
+    boundaries are the cheapest traffic to put on the DCI (one activation
+    block per microbatch tick), the classic reason PP is the cross-pod
+    axis at 1000+ node scale."""
+    shape = (8, 4, 16) if multi_pod else (4, 4, 16)
+    axes = ("pipe", "data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n: int = 8, axes=("data", "model"), shape=None):
+    """Small host-device mesh for subprocess tests."""
+    if shape is None:
+        shape = (n // 2, 2) if len(axes) == 2 else (n,)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes_for(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a not in ("model", "pipe"))
+
+
+def machine_axes_for(mesh) -> tuple:
+    return tuple(mesh.axis_names)

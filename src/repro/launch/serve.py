@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill + decode loop with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.models import transformer as tfm
+from repro.models.transformer import Parallelism
+from repro.training import make_lm_decode_step, make_lm_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    spec = get(args.arch)
+    cfg = spec.smoke_config if args.smoke else spec.config
+    par = Parallelism.none()
+    s_max = args.prompt_len + args.gen
+
+    params = tfm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    prefill = jax.jit(make_lm_prefill_step(cfg, par, s_max=s_max))
+    decode = jax.jit(make_lm_decode_step(cfg, par))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(args.prompt_len + i + 1))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / args.temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    t_decode = time.time() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len} tok in {t_prefill*1e3:.0f}ms; "
+          f"decode {args.gen} steps in {t_decode*1e3:.0f}ms "
+          f"({args.gen * args.batch / max(t_decode, 1e-9):.1f} tok/s)", flush=True)
+    print("sample row 0:", gen[0][:16].tolist(), flush=True)
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""Workload builders: (ArchSpec, shape, mesh) -> jit-able fn + ShapeDtypeStruct
+inputs + shardings. The dry-run lowers these; the drivers execute them.
+
+input_specs() returns stand-ins only (weak-type-correct, shardable, no device
+allocation): params via jax.eval_shape over the real initializer, batches as
+int/float ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchSpec
+from repro.launch.mesh import dp_axes_for, machine_axes_for
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm
+from repro.models.transformer import Parallelism
+from repro.optim import AdamWConfig
+from repro.optim.adamw import adamw_init, zero1_specs
+from repro.training import (
+    make_gnn_train_step,
+    make_lm_decode_step,
+    make_lm_prefill_step,
+    make_lm_train_step,
+    make_recsys_steps,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def sanitize_spec(spec: P, mesh) -> P:
+    names = set(mesh.axis_names)
+
+    def keep(part):
+        if part is None:
+            return None
+        if isinstance(part, (tuple, list)):
+            kept = tuple(p for p in part if p in names)
+            return kept if kept else None
+        return part if part in names else None
+
+    return P(*(keep(p) for p in spec))
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, sanitize_spec(s, mesh)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _eval_shape(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _parallelism(mesh) -> Parallelism:
+    return Parallelism(mesh=mesh, dp_axes=dp_axes_for(mesh), tp_axis="model")
+
+
+def _pad_to(x: int, mult: int) -> int:
+    """Fixed-capacity buffers pad up to a device-count multiple (the mask
+    machinery treats the padding as invalid entries)."""
+    return ((x + mult - 1) // mult) * mult
+
+
+# -------------------------------------------------------------------- LM
+def build_lm_workload(spec: ArchSpec, shape: dict, mesh, *, n_layers=None,
+                      analysis=False):
+    par = _parallelism(mesh)
+    cfg = spec.config
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    if analysis:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    key = jax.random.PRNGKey(0)
+    params_sds = _eval_shape(lambda: tfm.init_params(cfg, key))
+    pspecs = tfm.param_specs(cfg, par)
+
+    kind = shape["kind"]
+    b, s = shape["global_batch"], shape["seq_len"]
+    if kind == "train":
+        opt_sds = _eval_shape(adamw_init, params_sds)
+        ospecs = zero1_specs(pspecs, dp_axis="data", params_shapes=params_sds,
+                             dp_size=mesh.shape["data"])
+        step = make_lm_train_step(cfg, par, AdamWConfig())
+        batch_sds = {"tokens": SDS((b, s + 1), jnp.int32)}
+        batch_spec = {"tokens": P(par.dp_axes, None)}
+        return dict(
+            fn=step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                shardings(mesh, ospecs),
+                shardings(mesh, batch_spec),
+            ),
+            donate_argnums=(0, 1),
+        )
+    if kind == "prefill":
+        step = make_lm_prefill_step(cfg, par, s_max=s)
+        batch_sds = SDS((b, s), jnp.int32)
+        return dict(
+            fn=step,
+            args=(params_sds, batch_sds),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                NamedSharding(mesh, sanitize_spec(P(par.dp_axes, None), mesh)),
+            ),
+        )
+    if kind == "decode":
+        step = make_lm_decode_step(cfg, par)
+        cache_sds = _eval_shape(lambda: tfm.init_cache(cfg, b, s))
+        ck_spec, cv_spec = tfm.cache_specs(cfg, par)
+        tok_sds = SDS((b, 1), jnp.int32)
+        return dict(
+            fn=step,
+            args=(params_sds, cache_sds, tok_sds, SDS((), jnp.int32)),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                (
+                    NamedSharding(mesh, sanitize_spec(ck_spec, mesh)),
+                    NamedSharding(mesh, sanitize_spec(cv_spec, mesh)),
+                ),
+                NamedSharding(mesh, sanitize_spec(P(par.dp_axes, None), mesh)),
+                NamedSharding(mesh, P()),
+            ),
+            donate_argnums=(1,),
+        )
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- GNN
+def _gnn_graph_sds(arch, n, e, d_feat):
+    g = {
+        "src": SDS((e,), jnp.int32),
+        "dst": SDS((e,), jnp.int32),
+        "mask": SDS((e,), jnp.bool_),
+    }
+    if arch == "egnn":
+        g["h"] = SDS((n, d_feat), jnp.float32)
+        g["x"] = SDS((n, 3), jnp.float32)
+    else:
+        g["feats"] = SDS((n, d_feat), jnp.float32)
+    return g
+
+
+def _gnn_graph_specs(arch, machine_axes):
+    g = {
+        "src": P(machine_axes),
+        "dst": P(machine_axes),
+        "mask": P(machine_axes),
+    }
+    if arch == "egnn":
+        g["h"] = P(None, None)
+        g["x"] = P(None, None)
+    else:
+        g["feats"] = P(None, None)
+    return g
+
+
+def build_gnn_workload(spec: ArchSpec, shape: dict, mesh, *, n_layers=None,
+                       analysis=False):
+    par = _parallelism(mesh)
+    machines = machine_axes_for(mesh)
+    arch = spec.config.arch
+    kind = shape["kind"]
+    _maybe = (lambda c: dataclasses.replace(
+        c,
+        n_layers=(n_layers if n_layers is not None else c.n_layers),
+        scan_unroll=analysis,
+    ))
+
+    if kind == "full":
+        cfg = _maybe(gnn_mod.GNNConfig(
+            name=spec.config.name, arch=arch, n_layers=spec.config.n_layers,
+            d_hidden=spec.config.d_hidden, d_feat=shape["d_feat"],
+            n_classes=shape["n_classes"], pna_delta=spec.config.pna_delta,
+        ))
+        n = shape["n_nodes"]
+        e = _pad_to(shape["n_edges"], mesh.devices.size)
+        g_sds = _gnn_graph_sds(arch, n, e, shape["d_feat"])
+        g_specs = _gnn_graph_specs(arch, machines)
+        if arch == "egnn":
+            g_sds["target"] = SDS((1,), jnp.float32)
+            g_specs["target"] = P(None)
+        else:
+            g_sds["labels"] = SDS((n,), jnp.int32)
+            g_sds["label_mask"] = SDS((n,), jnp.bool_)
+            g_specs["labels"] = P(None)
+            g_specs["label_mask"] = P(None)
+        params_sds = _eval_shape(
+            lambda: gnn_mod.init_gnn(cfg, jax.random.PRNGKey(0))
+        )
+        opt_sds = _eval_shape(adamw_init, params_sds)
+        step = make_gnn_train_step(cfg, par, mode="full")
+        rep = jax.tree.map(lambda _: P(), params_sds)
+        rep_opt = jax.tree.map(lambda _: P(), opt_sds)
+        return dict(
+            fn=step,
+            args=(params_sds, opt_sds, g_sds),
+            in_shardings=(
+                shardings(mesh, rep),
+                shardings(mesh, rep_opt),
+                shardings(mesh, g_specs),
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    if kind == "sampled":
+        b = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        d = shape["d_feat"]
+        cfg = _maybe(gnn_mod.GNNConfig(
+            name=spec.config.name, arch=arch, n_layers=spec.config.n_layers,
+            d_hidden=spec.config.d_hidden, d_feat=d, n_classes=shape["n_classes"],
+            sample_sizes=(f1, f2), pna_delta=spec.config.pna_delta,
+        ))
+        params_sds = _eval_shape(lambda: gnn_mod.init_gnn(cfg, jax.random.PRNGKey(0)))
+        opt_sds = _eval_shape(adamw_init, params_sds)
+        dp = par.dp_axes
+        if arch == "graphsage":
+            # native fanout-tensor mode (the arch's own paper)
+            batch_sds = {
+                "x0": SDS((b, d), jnp.float32),
+                "x1": SDS((b, f1, d), jnp.float32),
+                "x2": SDS((b, f1, f2, d), jnp.float32),
+                "m1": SDS((b, f1), jnp.bool_),
+                "m2": SDS((b, f1, f2), jnp.bool_),
+                "labels": SDS((b,), jnp.int32),
+            }
+            batch_specs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+                           for k, v in batch_sds.items()}
+            step = make_gnn_train_step(cfg, par, mode="sampled")
+        else:
+            # sampled-subgraph mode: 2-hop block as a padded edge list
+            n_sub = b + b * f1 + b * f1 * f2
+            e_sub = _pad_to(b * f1 + b * f1 * f2, mesh.devices.size)
+            batch_sds = _gnn_graph_sds(arch, n_sub, e_sub, d)
+            batch_specs = _gnn_graph_specs(arch, machines)
+            if arch == "egnn":
+                batch_sds["target"] = SDS((1,), jnp.float32)
+                batch_specs["target"] = P(None)
+            else:
+                batch_sds["labels"] = SDS((n_sub,), jnp.int32)
+                batch_sds["label_mask"] = SDS((n_sub,), jnp.bool_)
+                batch_specs["labels"] = P(None)
+                batch_specs["label_mask"] = P(None)
+            step = make_gnn_train_step(cfg, par, mode="full")
+        rep = jax.tree.map(lambda _: P(), params_sds)
+        rep_opt = jax.tree.map(lambda _: P(), opt_sds)
+        return dict(
+            fn=step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(
+                shardings(mesh, rep),
+                shardings(mesh, rep_opt),
+                shardings(mesh, batch_specs),
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    if kind == "batched":
+        g, n, e = shape["batch"], shape["n_nodes"], shape["n_edges"]
+        d = shape["d_feat"]
+        cfg = _maybe(gnn_mod.GNNConfig(
+            name=spec.config.name, arch=arch, n_layers=spec.config.n_layers,
+            d_hidden=spec.config.d_hidden, d_feat=d, n_classes=1,
+            pna_delta=spec.config.pna_delta,
+        ))
+        params_sds = _eval_shape(lambda: gnn_mod.init_gnn(cfg, jax.random.PRNGKey(0)))
+        opt_sds = _eval_shape(adamw_init, params_sds)
+        dp = par.dp_axes
+        per_graph = _gnn_graph_sds(arch, n, e, d)
+        graphs = {k: SDS((g,) + v.shape, v.dtype) for k, v in per_graph.items()}
+        batch_sds = {"graphs": graphs, "targets": SDS((g,), jnp.float32)}
+        gspecs = {k: P(dp, *([None] * len(per_graph[k].shape)))
+                  for k in per_graph}
+        batch_specs = {"graphs": gspecs, "targets": P(dp)}
+        step = make_gnn_train_step(cfg, par, mode="batched")
+        rep = jax.tree.map(lambda _: P(), params_sds)
+        rep_opt = jax.tree.map(lambda _: P(), opt_sds)
+        return dict(
+            fn=step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(
+                shardings(mesh, rep),
+                shardings(mesh, rep_opt),
+                shardings(mesh, batch_specs),
+            ),
+            donate_argnums=(0, 1),
+        )
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- recsys
+def build_recsys_workload(spec: ArchSpec, shape: dict, mesh, *, n_layers=None,
+                          analysis=False):
+    par = _parallelism(mesh)
+    cfg = spec.config
+    if analysis:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    params_sds = _eval_shape(lambda: rec_mod.init_sasrec(cfg, jax.random.PRNGKey(0)))
+    pspecs = rec_mod.param_specs(cfg, par)
+    steps = make_recsys_steps(cfg, par)
+    dp = par.dp_axes
+    kind = shape["kind"]
+    b = shape["batch"]
+    s = cfg.seq_len
+
+    if kind == "train":
+        opt_sds = _eval_shape(adamw_init, params_sds)
+        ospecs = zero1_specs(pspecs, dp_axis="data", params_shapes=params_sds,
+                             dp_size=mesh.shape["data"])
+        batch_sds = {
+            "seq": SDS((b, s), jnp.int32),
+            "pos": SDS((b, s), jnp.int32),
+            "neg": SDS((b, s), jnp.int32),
+        }
+        batch_specs = {k: P(dp, None) for k in batch_sds}
+        return dict(
+            fn=steps["train"],
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                shardings(mesh, ospecs),
+                shardings(mesh, batch_specs),
+            ),
+            donate_argnums=(0, 1),
+        )
+    if kind == "serve":
+        return dict(
+            fn=steps["serve"],
+            args=(params_sds, SDS((b, s), jnp.int32)),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                NamedSharding(mesh, sanitize_spec(P(dp, None), mesh)),
+            ),
+        )
+    if kind == "bulk":
+        return dict(
+            fn=steps["bulk"],
+            args=(params_sds, SDS((b, s), jnp.int32)),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                NamedSharding(mesh, sanitize_spec(P(dp, None), mesh)),
+            ),
+        )
+    if kind == "retrieval":
+        c = _pad_to(shape["n_candidates"], mesh.devices.size)
+        machines = machine_axes_for(mesh)
+        return dict(
+            fn=steps["retrieval"],
+            args=(
+                params_sds,
+                SDS((b, s), jnp.int32),
+                SDS((b, s), jnp.bool_),
+                SDS((c,), jnp.int32),
+            ),
+            in_shardings=(
+                shardings(mesh, pspecs),
+                NamedSharding(mesh, P()),
+                NamedSharding(mesh, P()),
+                # candidates sharded over every device: scores [B, C/devices]
+                NamedSharding(mesh, sanitize_spec(P(machines), mesh)),
+            ),
+        )
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- bridges
+def build_bridges_workload(spec: ArchSpec, shape: dict, mesh, *, n_layers=None,
+                           analysis=False):
+    from repro.core.merge import build_distributed_bridges_fn
+    from repro.core.partition import shard_capacity
+
+    machines = machine_axes_for(mesh)
+    m = math.prod(mesh.shape[a] for a in machines)
+    n, e = shape["n_nodes"], shape["n_edges"]
+    cap = shard_capacity(e, m)
+    cfg = spec.config
+    fn = build_distributed_bridges_fn(
+        mesh, machines, n, schedule=cfg.schedule, final=cfg.final,
+        merge=getattr(cfg, "merge", "recertify"),
+    )
+    args = (
+        SDS((m, cap), jnp.int32),
+        SDS((m, cap), jnp.int32),
+        SDS((m, cap), jnp.bool_),
+    )
+    sh = NamedSharding(mesh, P(machines, None))
+    return dict(fn=fn, args=args, in_shardings=(sh, sh, sh))
+
+
+BUILDERS = {
+    "lm": build_lm_workload,
+    "gnn": build_gnn_workload,
+    "recsys": build_recsys_workload,
+    "graph": build_bridges_workload,
+}
+
+
+def build_workload(spec: ArchSpec, shape_name: str, mesh, *, n_layers=None,
+                   analysis=False):
+    if shape_name in spec.skips:
+        raise ValueError(f"skipped shape: {spec.skips[shape_name]}")
+    return BUILDERS[spec.family](
+        spec, spec.shapes[shape_name], mesh, n_layers=n_layers, analysis=analysis
+    )

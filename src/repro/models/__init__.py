@@ -1,0 +1,1 @@
+# Subpackages: layers, transformer, moe, gnn, recsys (import directly).

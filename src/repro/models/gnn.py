@@ -1,0 +1,306 @@
+"""GNN architectures on the segment-op message-passing substrate.
+
+JAX has no sparse SpMM beyond BCOO; message passing here is implemented the
+TPU-native way (taxonomy §GNN): gather by edge src -> transform -> scatter
+(segment_sum/max/min) by edge dst. Edges are fixed-capacity masked buffers so
+the whole model jits with static shapes; edge buffers shard over the mesh and
+the scatter-adds become psums under GSPMD.
+
+Archs: graphsage (mean agg, + sampled-fanout mode), pna (4 aggregators x 3
+degree scalers), egnn (E(n)-equivariant coordinate updates), gatedgcn
+(edge-gated aggregation, 16 layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # graphsage | pna | egnn | gatedgcn
+    n_layers: int
+    d_hidden: int
+    d_feat: int
+    n_classes: int = 16
+    sample_sizes: tuple = ()  # graphsage minibatch fanouts, outer->inner
+    pna_delta: float = 2.5  # E[log(deg+1)] normalizer
+    param_dtype: str = "float32"
+    scan_unroll: bool = False  # analysis mode (see launch/dryrun.py)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def _dense(key, din, dout, dt, sig=None):
+    sig = sig or (1.0 / math.sqrt(din))
+    return jax.random.normal(key, (din, dout), dt) * sig
+
+
+# ---------------------------------------------------------------- aggregation
+def segment_mean(vals, ids, n, mask):
+    w = mask.astype(vals.dtype)
+    s = jax.ops.segment_sum(vals * w[:, None], ids, num_segments=n)
+    c = jax.ops.segment_sum(w, ids, num_segments=n)
+    return s / jnp.maximum(c[:, None], 1.0), c
+
+
+def gather_scatter(h, src, dst, mask, n, reduce="sum"):
+    msg = jnp.where(mask[:, None], h[src], 0)
+    if reduce == "sum":
+        return jax.ops.segment_sum(msg, dst, num_segments=n)
+    if reduce == "max":
+        neg = jnp.finfo(h.dtype).min
+        out = jax.ops.segment_max(
+            jnp.where(mask[:, None], h[src], neg), dst, num_segments=n
+        )
+        return jnp.where(jnp.isfinite(out), out, 0)
+    if reduce == "min":
+        pos = jnp.finfo(h.dtype).max
+        out = jax.ops.segment_min(
+            jnp.where(mask[:, None], h[src], pos), dst, num_segments=n
+        )
+        return jnp.where(jnp.isfinite(out), out, 0)
+    raise ValueError(reduce)
+
+
+# ------------------------------------------------------------------ GraphSAGE
+def init_graphsage(cfg: GNNConfig, key):
+    dt = cfg.dtype
+    ks = jax.random.split(key, cfg.n_layers * 2 + 1)
+    lay = []
+    din = cfg.d_feat
+    for l in range(cfg.n_layers):
+        dout = cfg.d_hidden
+        lay.append({
+            "w_self": _dense(ks[2 * l], din, dout, dt),
+            "w_nb": _dense(ks[2 * l + 1], din, dout, dt),
+        })
+        din = dout
+    return {"layers": lay, "w_out": _dense(ks[-1], din, cfg.n_classes, dt)}
+
+
+def graphsage_forward(params, g, cfg: GNNConfig):
+    """Full-graph mode: g = {feats, src, dst, mask}."""
+    h = g["feats"].astype(cfg.dtype)
+    n = h.shape[0]
+    for lp in params["layers"]:
+        nb, _ = segment_mean(h[g["src"]], g["dst"], n, g["mask"])
+        h = jax.nn.relu(h @ lp["w_self"] + nb @ lp["w_nb"])
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h @ params["w_out"]
+
+
+def graphsage_sampled_forward(params, batch, cfg: GNNConfig):
+    """Sampled mode: batch = {x0 [B,F], x1 [B,f1,F], x2 [B,f1,f2,F]} with
+    masks m1 [B,f1], m2 [B,f1,f2] — the fanout tensors from the neighbor
+    sampler (minibatch_lg)."""
+    l1, l2 = params["layers"][0], params["layers"][1]
+
+    def sage(lp, h_self, h_nb, m):
+        nb = jnp.sum(h_nb * m[..., None], axis=-2) / jnp.maximum(
+            jnp.sum(m, axis=-1, keepdims=True), 1.0
+        )
+        h = jax.nn.relu(h_self @ lp["w_self"] + nb @ lp["w_nb"])
+        return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+
+    h1_nb = sage(l1, batch["x1"], batch["x2"], batch["m2"])  # [B, f1, H]
+    h0_self = sage(l1, batch["x0"], batch["x1"], batch["m1"])  # [B, H]
+    h0 = sage(l2, h0_self, h1_nb, batch["m1"])  # [B, H]
+    return h0 @ params["w_out"]
+
+
+# ------------------------------------------------------------------------ PNA
+PNA_AGGS = ("mean", "max", "min", "std")
+
+
+def init_pna(cfg: GNNConfig, key):
+    dt = cfg.dtype
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    lay = []
+    din = cfg.d_feat
+    for l in range(cfg.n_layers):
+        lay.append({
+            "w": _dense(ks[l], din * len(PNA_AGGS) * 3 + din, cfg.d_hidden, dt),
+            "ln": jnp.ones((cfg.d_hidden,), dt),
+        })
+        din = cfg.d_hidden
+    return {"layers": lay, "w_out": _dense(ks[-1], din, cfg.n_classes, dt)}
+
+
+def pna_forward(params, g, cfg: GNNConfig):
+    h = g["feats"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst, mask = g["src"], g["dst"], g["mask"]
+    for lp in params["layers"]:
+        mean, deg = segment_mean(h[src], dst, n, mask)
+        mx = gather_scatter(h, src, dst, mask, n, "max")
+        mn = gather_scatter(h, src, dst, mask, n, "min")
+        sq, _ = segment_mean(h[src] ** 2, dst, n, mask)
+        std = jnp.sqrt(jnp.maximum(sq - mean**2, 0) + 1e-6)
+        aggs = jnp.concatenate([mean, mx, mn, std], axis=-1)  # [N, 4*D]
+        logd = jnp.log(deg + 1.0)[:, None]
+        scaled = jnp.concatenate(
+            [aggs, aggs * (logd / cfg.pna_delta), aggs * (cfg.pna_delta / jnp.maximum(logd, 1e-6))],
+            axis=-1,
+        )  # identity / amplification / attenuation
+        h = jax.nn.relu(_ln(jnp.concatenate([h, scaled], axis=-1) @ lp["w"], lp["ln"]))
+    return h @ params["w_out"]
+
+
+# ----------------------------------------------------------------------- EGNN
+def init_egnn(cfg: GNNConfig, key):
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers * 4 + 2)
+    lay = []
+    for l in range(cfg.n_layers):
+        lay.append({
+            "phi_e1": _dense(ks[4 * l], 2 * d + 1, d, dt),
+            "phi_e2": _dense(ks[4 * l + 1], d, d, dt),
+            "phi_x": _dense(ks[4 * l + 2], d, 1, dt, sig=1e-3),
+            "phi_h": _dense(ks[4 * l + 3], 2 * d, d, dt),
+        })
+    return {
+        "embed": _dense(ks[-2], cfg.d_feat, d, dt),
+        "layers": lay,
+        "w_out": _dense(ks[-1], d, 1, dt),
+    }
+
+
+def egnn_forward(params, g, cfg: GNNConfig):
+    """One graph: g = {h [n,F], x [n,3], src, dst, mask}. Returns (scalar
+    prediction, coords) — E(n)-equivariant coordinate updates."""
+    h = g["h"].astype(cfg.dtype) @ params["embed"]
+    x = g["x"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst, mask = g["src"], g["dst"], g["mask"]
+    for lp in params["layers"]:
+        diff = x[src] - x[dst]  # [E, 3]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m_in = jnp.concatenate([h[src], h[dst], d2], axis=-1)
+        m = jax.nn.silu(jax.nn.silu(m_in @ lp["phi_e1"]) @ lp["phi_e2"])
+        m = jnp.where(mask[:, None], m, 0)
+        # coordinate update (equivariant): x_i += mean_j (x_i-x_j) * phi_x(m_ij)
+        cw = m @ lp["phi_x"]  # [E, 1]
+        cmsg = jnp.where(mask[:, None], -diff * cw, 0)  # direction into dst
+        agg_x = jax.ops.segment_sum(cmsg, dst, num_segments=n)
+        deg = jax.ops.segment_sum(mask.astype(x.dtype), dst, num_segments=n)
+        x = x + agg_x / jnp.maximum(deg[:, None], 1.0)
+        # feature update
+        agg_m = jax.ops.segment_sum(m, dst, num_segments=n)
+        h = h + jax.nn.silu(jnp.concatenate([h, agg_m], axis=-1) @ lp["phi_h"])
+    pred = jnp.sum(h @ params["w_out"], axis=0)  # graph-level readout
+    return pred, x
+
+
+# ------------------------------------------------------------------- GatedGCN
+def init_gatedgcn(cfg: GNNConfig, key):
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers * 5 + 3)
+    lay = []
+    for l in range(cfg.n_layers):
+        lay.append({
+            "A": _dense(ks[5 * l], d, d, dt),
+            "B": _dense(ks[5 * l + 1], d, d, dt),
+            "C": _dense(ks[5 * l + 2], d, d, dt),
+            "U": _dense(ks[5 * l + 3], d, d, dt),
+            "V": _dense(ks[5 * l + 4], d, d, dt),
+            "ln_h": jnp.ones((d,), dt),
+            "ln_e": jnp.ones((d,), dt),
+        })
+    return {
+        "embed": _dense(ks[-2], cfg.d_feat, d, dt),
+        "e_embed": jnp.zeros((d,), dt),
+        "layers": lay,
+        "w_out": _dense(ks[-1], d, cfg.n_classes, dt),
+    }
+
+
+def _ln(x, w, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * w
+
+
+def gatedgcn_forward(params, g, cfg: GNNConfig):
+    h = g["feats"].astype(cfg.dtype) @ params["embed"]
+    n = h.shape[0]
+    src, dst, mask = g["src"], g["dst"], g["mask"]
+    e = jnp.broadcast_to(params["e_embed"], (src.shape[0], cfg.d_hidden))
+
+    def body(carry, lp):
+        h, e = carry
+        eh = h[src] @ lp["A"] + h[dst] @ lp["B"] + e @ lp["C"]
+        gate = jax.nn.sigmoid(eh)
+        gate = jnp.where(mask[:, None], gate, 0)
+        num = jax.ops.segment_sum(gate * (h[src] @ lp["V"]), dst, num_segments=n)
+        den = jax.ops.segment_sum(gate, dst, num_segments=n)
+        h_new = h @ lp["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(_ln(h_new, lp["ln_h"]))  # residual
+        e = e + jax.nn.relu(_ln(eh, lp["ln_e"]))
+        return (h, e), None
+
+    # 16 layers -> scan keeps the HLO at one layer
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+    (h, e), _ = lax.scan(body, (h, e), stacked, unroll=cfg.scan_unroll)
+    return h @ params["w_out"]
+
+
+# ------------------------------------------------------------------ dispatch
+INITS = {
+    "graphsage": init_graphsage,
+    "pna": init_pna,
+    "egnn": init_egnn,
+    "gatedgcn": init_gatedgcn,
+}
+FORWARDS = {
+    "graphsage": graphsage_forward,
+    "pna": pna_forward,
+    "gatedgcn": gatedgcn_forward,
+}
+
+
+def init_gnn(cfg: GNNConfig, key):
+    return INITS[cfg.arch](cfg, key)
+
+
+def node_classification_loss(params, g, cfg: GNNConfig, par=None):
+    """Full-graph training: CE over labeled nodes. Edge buffers shard over
+    the mesh; node tensors stay replicated (see DESIGN.md §GNN sharding)."""
+    if par is not None and par.mesh is not None:
+        machine_axes = tuple(par.dp_axes) + ((par.tp_axis,) if par.tp_axis else ())
+        g = dict(g)
+        g["src"] = shard(g["src"], P(machine_axes))
+        g["dst"] = shard(g["dst"], P(machine_axes))
+        g["mask"] = shard(g["mask"], P(machine_axes))
+    logits = FORWARDS[cfg.arch](params, g, cfg)
+    labels = g["labels"]
+    lm = g["label_mask"].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.sum(gold * lm) / jnp.maximum(jnp.sum(lm), 1.0)
+
+
+def egnn_batch_loss(params, batch, cfg: GNNConfig, par=None):
+    """Batched small graphs (molecule shape): MSE on graph-level target."""
+    pred, _ = jax.vmap(lambda g: egnn_forward(params, g, cfg))(batch["graphs"])
+    return jnp.mean((pred[:, 0] - batch["targets"]) ** 2)
+
+
+def sage_minibatch_loss(params, batch, cfg: GNNConfig, par=None):
+    logits = graphsage_sampled_forward(params, batch, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return -jnp.mean(gold)

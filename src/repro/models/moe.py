@@ -1,0 +1,143 @@
+"""Mixture-of-Experts layer with expert parallelism over the `model` axis.
+
+Design (TPU-native, shard_map island inside the pjit program):
+
+  * activations enter replicated over `model` (the usual TP entry state), so
+    every model-rank sees the same local tokens and computes identical
+    routing — no routing-metadata exchange at all;
+  * each rank scatters ONLY the tokens routed to its E/tp owned experts into
+    a fixed-capacity [E_local, C, D] buffer (sort-free: position-in-expert
+    ranks come from a cumsum over the one-hot assignment);
+  * expert GEMMs run on the owned slice; outputs scatter back to token slots;
+  * one psum over `model` combines the per-rank partial outputs — the same
+    single collective a Megatron TP MLP needs.
+
+Capacity drops follow Switch/GShard: tokens beyond C = ceil(T*k/E * cf) are
+dropped (their gate mass is simply lost); an aux load-balance loss keeps the
+router near-uniform. All shapes are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+def moe_ffn_local(x_flat, router_w, we_gate, we_in, we_out, *, cfg: MoEConfig,
+                  e_start: int, n_local: int):
+    """Per-device MoE math. x_flat: [T, D]; we_*: [E_local, D, F]/[E_local, F, D].
+
+    Returns (out_partial [T, D], aux_loss scalar). Sum out_partial over ranks
+    (psum) to complete the combine.
+    """
+    t, d = x_flat.shape
+    e = cfg.n_experts
+    k = cfg.top_k
+    cap = max(int(math.ceil(t * k / e * cfg.capacity_factor)), 1)
+
+    logits = (x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, topk_idx = lax.top_k(probs, k)  # [T, k]
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    assign1 = jax.nn.one_hot(topk_idx[:, 0], e, dtype=jnp.float32)
+    f = jnp.mean(assign1, axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * p)
+
+    # position of each (token, k) inside its expert queue, computed sort-free:
+    # one_hot over experts -> column cumsum. [T*k] assignments.
+    e_flat = topk_idx.reshape(-1)  # [T*k]
+    g_flat = gates.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # [T*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # rank within expert
+    rank = jnp.sum(pos_in_e * onehot, axis=-1)  # [T*k]
+
+    local = (e_flat >= e_start) & (e_flat < e_start + n_local) & (rank < cap)
+    e_loc = jnp.where(local, e_flat - e_start, 0)
+    slot = jnp.where(local, rank, cap)  # cap = dropped (OOB)
+    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
+
+    buf = jnp.zeros((n_local, cap + 1, d), x_flat.dtype)
+    buf = buf.at[e_loc, slot].add(jnp.where(local[:, None], x_flat[token_of], 0))
+    buf = buf[:, :cap]  # [E_local, C, D]
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, we_gate)) * jnp.einsum(
+        "ecd,edf->ecf", buf, we_in
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, we_out)  # [E_local, C, D]
+
+    # combine: gather each (token, k) slot's output back, weighted by gate
+    y_pad = jnp.concatenate([y, jnp.zeros((n_local, 1, d), y.dtype)], axis=1)
+    contrib = y_pad[e_loc, jnp.where(local, slot, cap)]  # [T*k, D]
+    contrib = contrib * (g_flat[:, None].astype(contrib.dtype))
+    contrib = jnp.where(local[:, None], contrib, 0)
+    out = jax.ops.segment_sum(contrib, token_of, num_segments=t)  # [T, D]
+    return out.astype(x_flat.dtype), aux
+
+
+def make_moe_layer(mesh, dp_axes, tp_axis: str, cfg: MoEConfig):
+    """Returns moe(x[B,S,D], router_w, we_gate, we_in, we_out) -> (y, aux).
+
+    Expert weights arrive as full [E, D, F] arrays; shard_map slices the
+    expert dim over ``tp_axis``. Without a mesh (CPU smoke tests) the layer
+    runs the same math on a single device with all experts local.
+    """
+    if mesh is None or not mesh.shape:
+        def moe_single(x, router_w, we_gate, we_in, we_out):
+            b, s, d = x.shape
+            out, aux = moe_ffn_local(
+                x.reshape(b * s, d), router_w, we_gate, we_in, we_out,
+                cfg=cfg, e_start=0, n_local=cfg.n_experts,
+            )
+            return out.reshape(b, s, d), aux
+
+        return moe_single
+
+    tp = mesh.shape[tp_axis]
+    assert cfg.n_experts % tp == 0, (cfg.n_experts, tp)
+    n_local = cfg.n_experts // tp
+    dp_spec = tuple(dp_axes)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            P(dp_spec, None, None),  # x: batch-sharded, replicated over tp
+            P(None, None),  # router: replicated
+            P(tp_axis, None, None),  # experts sharded over tp
+            P(tp_axis, None, None),
+            P(tp_axis, None, None),
+        ),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )
+    def moe_sharded(x, router_w, we_gate, we_in, we_out):
+        b, s, d = x.shape
+        rank = lax.axis_index(tp_axis)
+        e_start = rank * n_local
+        out, aux = moe_ffn_local(
+            x.reshape(b * s, d), router_w, we_gate, we_in, we_out,
+            cfg=cfg, e_start=e_start, n_local=n_local,
+        )
+        out = lax.psum(out, tp_axis)  # combine expert partials (TP-style)
+        aux = lax.pmean(aux, tp_axis)
+        if dp_spec:
+            aux = lax.pmean(aux, dp_spec)
+        return out.reshape(b, s, d), aux
+
+    return moe_sharded

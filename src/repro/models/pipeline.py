@@ -1,0 +1,182 @@
+"""GPipe-style pipeline parallelism over a `pipe` mesh axis.
+
+Layers are stacked [L, ...] as usual; PP reshapes them to
+[n_stages, L/n_stages, ...] and shards the STAGE dim over `pipe`. The
+global batch is split into `n_micro` microbatches that stream through the
+stages: one `lax.scan` over T = n_micro + n_stages - 1 ticks, with stage
+boundaries crossed by a single `lax.ppermute` of the activation block per
+tick (the bubble is the usual (n_stages-1)/T fraction). Everything lives
+inside one `shard_map`, so the whole pipeline — microbatch streaming,
+boundary permutes, per-stage layer scan — is one XLA program that the
+multi-pod dry-run can lower, and `jax.grad` differentiates straight
+through it (ppermute transposes to the reverse permute; the backward pass
+is the standard GPipe 1F-then-1B-per-tick schedule XLA derives from the
+scan's reverse).
+
+Composes with the existing parallelism: `pipe` shards stages, `data`
+shards the microbatch rows, `model` does TP inside each layer exactly as
+in the non-PP path (same `_attention_block` / FFN shardings).
+
+Limitations (documented, deliberate): requires L % n_stages == 0 and
+global_batch % (n_micro * data) == 0; embedding + final norm live on
+every stage (replicated — ~vocab*d bf16, the same ZeRO-1 treatment as the
+non-PP path) with the embed lookup masked to stage 0 and the loss masked
+to the last stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.layers import rms_norm, shard
+from repro.models.transformer import LMConfig, Parallelism
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_micro: int  # microbatches streamed per step (>= n_stages to fill)
+    pipe_axis: str = "pipe"
+
+
+def stage_param_specs(cfg: LMConfig, par: Parallelism, pp: PipelineConfig):
+    """PartitionSpecs with the stacked layer dim re-interpreted as
+    [n_stages sharded over pipe, L/n_stages, ...]."""
+    base = tfm.param_specs(cfg, par)
+    pipe = pp.pipe_axis
+
+    def stageify(spec: P) -> P:
+        # layer-stacked params: leading dim L -> (pipe, L/S) => prepend pipe
+        return P(pipe, *spec)
+
+    layers = {k: stageify(v) for k, v in base["layers"].items()}
+    return {"embed": base["embed"], "final_norm": base["final_norm"],
+            "layers": layers}
+
+
+def stageify_params(params: dict, n_stages: int) -> dict:
+    """[L, ...] stacked layer params -> [n_stages, L/S, ...]."""
+    def re(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+
+    return {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "layers": jax.tree.map(re, params["layers"]),
+    }
+
+
+def make_pp_loss_fn(cfg: LMConfig, par: Parallelism, pp: PipelineConfig):
+    """Returns loss(params_staged, batch) running the GPipe schedule.
+
+    batch: {"tokens": int32[n_micro, mb, S+1]} — already split into
+    microbatches (mb is the per-microbatch global rows; `data` shards mb).
+    """
+    mesh = par.mesh
+    pipe = pp.pipe_axis
+    n_stages, n_micro = pp.n_stages, pp.n_micro
+    dp, tp = par.dp_axes, par.tp_axis
+    layer_fn = tfm._make_layer_fn(cfg, par, decode=False)
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn)
+
+    # Partial manualization: ONLY the pipe axis is manual (explicit
+    # ppermute/psum); data/model stay Auto so every with_sharding_constraint
+    # inside the layer body — the TP semantics of the non-PP path — applies
+    # unchanged. in_specs therefore mention only the pipe axis.
+    def _stage_only(spec: P) -> P:
+        return P(pipe, *([None] * (len(spec) - 1)))
+
+    pspecs = {
+        "embed": P(*([None] * 2)),
+        "final_norm": P(None),
+        "layers": jax.tree.map(_stage_only,
+                               stage_param_specs(cfg, par, pp)["layers"],
+                               is_leaf=lambda x: isinstance(x, P)),
+    }
+    in_specs = (pspecs, {"tokens": P(None, None, None)})
+
+    def body(params, batch):
+        sidx = lax.axis_index(pipe)
+        layers = jax.tree.map(lambda x: x[0], params["layers"])  # local stage
+        tokens = batch["tokens"][:, :, :-1]   # [n_micro, mb, S]
+        targets = batch["tokens"][:, :, 1:]
+        nm, mb, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (mb, s))
+        fwd = [(i, i + 1) for i in range(n_stages - 1)]  # stage i -> i+1
+
+        def run_stage(x):
+            (x, _, aux), _ = lax.scan(
+                layer_fn, (x, positions, jnp.zeros((), jnp.float32)), layers,
+                unroll=cfg.scan_unroll,
+            )
+            return x, aux
+
+        def tick(carry, t):
+            buf, loss_sum, aux_sum = carry  # buf: [mb, S, D] stage input
+            mb_in = jnp.clip(t, 0, nm - 1)          # microbatch entering s0
+            mb_out = jnp.clip(t - (n_stages - 1), 0, nm - 1)  # leaving last
+            # stage 0 ingests the embedded microbatch; others use the buffer
+            x0 = jnp.take(params["embed"], tokens[mb_in], axis=0)
+            x = jnp.where((sidx == 0) & (t < nm), x0.astype(buf.dtype), buf)
+            x = shard(x, P(dp, None, None))
+            y, aux = run_stage(x)
+            # last stage: loss for the microbatch that just completed
+            h = rms_norm(y, params["final_norm"])
+            ce = tfm.chunked_cross_entropy(
+                h, params["embed"], targets[mb_out], cfg.loss_chunks,
+                unroll=cfg.scan_unroll,
+            )
+            valid = (sidx == n_stages - 1) & (t >= n_stages - 1)
+            loss_sum = loss_sum + jnp.where(valid, ce, 0.0)
+            aux_sum = aux_sum + jnp.where(valid, aux, 0.0)
+            # stream activations: stage s output becomes stage s+1 input
+            buf = lax.ppermute(y, pipe, fwd)
+            return (buf, loss_sum, aux_sum), None
+
+        buf0 = jnp.zeros((mb, s, cfg.d_model), cfg.dtype)
+        ticks = jnp.arange(nm + n_stages - 1, dtype=jnp.int32)
+        (_, loss_sum, aux_sum), _ = lax.scan(
+            tick, (buf0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            ticks,
+        )
+        # every stage returns the same scalar (loss lives on the last stage)
+        loss = lax.psum(loss_sum, pipe) / nm
+        aux = lax.psum(aux_sum, pipe) / max(nm, 1)
+        return loss + 0.01 * aux / max(cfg.n_layers, 1)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        axis_names={pipe},  # manualize ONLY pipe; data/model stay GSPMD
+        check_vma=False,
+    )
+
+
+def make_pp_train_step(cfg: LMConfig, par: Parallelism, pp: PipelineConfig,
+                       opt_cfg=None, total_steps: int = 10_000,
+                       warmup: int = 200):
+    """AdamW train step over the pipelined loss (same optimizer substrate)."""
+    from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_pp_loss_fn(cfg, par, pp)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr_scale = cosine_schedule(opt_state["step"], warmup=warmup,
+                                   total=total_steps)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step

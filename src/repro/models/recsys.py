@@ -1,0 +1,266 @@
+"""SASRec (self-attentive sequential recommendation) + retrieval substrate.
+
+The embedding LOOKUP is the hot path (taxonomy §RecSys): the item table is
+[n_items, d] with n_items ~ 2^20 (sharded over `model` rows at scale), and
+the four assigned shapes exercise four different access regimes:
+
+  train_batch    — huge-batch training with sampled softmax (1 pos + 1 neg
+                   per position, BCE), the SASRec paper objective;
+  serve_p99      — small-batch online scoring: last-position user state vs
+                   the full item table (one [B, d] @ [d, V] matmul);
+  serve_bulk     — offline scoring of 262k users: chunked top-k scan so the
+                   [B, V] score matrix never materializes;
+  retrieval_cand — one user vs 10^6 candidate ids: embedding-bag user vector
+                   + gathered-candidate dot scoring (batched-dot, no loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.embedding_bag import embedding_bag
+from repro.models.layers import chunked_causal_attention, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1 << 20  # 2^20 rows: divisible by 16-way model sharding
+    d: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    param_dtype: str = "float32"
+    scan_unroll: bool = False  # analysis mode (see launch/dryrun.py)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def init_sasrec(cfg: SASRecConfig, key):
+    dt = cfg.dtype
+    ks = jax.random.split(key, 2 + cfg.n_blocks * 6)
+    blocks = []
+    d = cfg.d
+    for b in range(cfg.n_blocks):
+        k0 = 2 + b * 6
+        blocks.append({
+            "wq": jax.random.normal(ks[k0], (d, d), dt) * d**-0.5,
+            "wk": jax.random.normal(ks[k0 + 1], (d, d), dt) * d**-0.5,
+            "wv": jax.random.normal(ks[k0 + 2], (d, d), dt) * d**-0.5,
+            "w1": jax.random.normal(ks[k0 + 3], (d, d), dt) * d**-0.5,
+            "w2": jax.random.normal(ks[k0 + 4], (d, d), dt) * d**-0.5,
+            "ln1": jnp.ones((d,), dt),
+            "ln2": jnp.ones((d,), dt),
+        })
+    return {
+        # row 0 is the padding item
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, cfg.d), dt) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, cfg.d), dt) * 0.02,
+        "blocks": blocks,
+    }
+
+
+def param_specs(cfg: SASRecConfig, par) -> dict:
+    tp = par.tp_axis
+    blk = {k: P(None, None) for k in ("wq", "wk", "wv", "w1", "w2")}
+    blk["ln1"] = P(None)
+    blk["ln2"] = P(None)
+    return {
+        "item_emb": P(tp, None),  # the big table: row-sharded
+        "pos_emb": P(None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+    }
+
+
+def _ln(x, w, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * w
+
+
+def sasrec_hidden(params, seq, cfg: SASRecConfig, par=None):
+    """seq: int32[B, S] item ids (0 = pad) -> hidden states [B, S, d]."""
+    dp = par.dp_axes if par is not None else ()
+    x = jnp.take(params["item_emb"], seq, axis=0) * (cfg.d ** 0.5)
+    x = x + params["pos_emb"][None, : seq.shape[1]]
+    x = shard(x, P(dp, None, None))
+    pad = (seq == 0)[..., None]
+    x = jnp.where(pad, 0, x)
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q = (h @ blk["wq"])[:, :, None, :]  # single head
+        k = (h @ blk["wk"])[:, :, None, :]
+        v = (h @ blk["wv"])[:, :, None, :]
+        attn = chunked_causal_attention(q, k, v, chunk=seq.shape[1])[:, :, 0]
+        x = x + attn
+        h2 = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h2 @ blk["w1"]) @ blk["w2"]
+        x = jnp.where(pad, 0, x)
+    return shard(x, P(dp, None, None))
+
+
+def sasrec_train_loss(params, batch, cfg: SASRecConfig, par=None):
+    """batch = {seq, pos, neg} each int32[B, S]; BCE on sampled logits."""
+    h = sasrec_hidden(params, batch["seq"], cfg, par)
+    pe = jnp.take(params["item_emb"], batch["pos"], axis=0)
+    ne = jnp.take(params["item_emb"], batch["neg"], axis=0)
+    lp = jnp.sum(h * pe, axis=-1).astype(jnp.float32)
+    ln_ = jnp.sum(h * ne, axis=-1).astype(jnp.float32)
+    valid = (batch["pos"] != 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(lp) + jax.nn.log_sigmoid(-ln_)) * valid
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def sasrec_user_state(params, seq, cfg: SASRecConfig, par=None):
+    """Last-position hidden state: the user's next-item query vector."""
+    return sasrec_hidden(params, seq, cfg, par)[:, -1]
+
+
+def serve_scores(params, seq, cfg: SASRecConfig, par=None):
+    """Online serving (serve_p99): [B, n_items] scores in one matmul."""
+    u = sasrec_user_state(params, seq, cfg, par)  # [B, d]
+    dp = par.dp_axes if par is not None else ()
+    tp = par.tp_axis if par is not None else None
+    scores = u @ params["item_emb"].T
+    return shard(scores, P(dp, tp))
+
+
+def serve_bulk_topk(params, seq, cfg: SASRecConfig, par=None, k: int = 100,
+                    n_chunks: int = 64, n_shards: int | None = None):
+    """Offline scoring (serve_bulk): SHARD-LOCAL chunked top-k + one merge.
+
+    The item table is row-sharded over `model`; a naive chunked scan makes
+    every per-chunk [B, chunk] score tensor cross the model axis for its
+    top_k (measured ~1.1 TB/device of all-gathers at B=262k, V=2^20 — see
+    EXPERIMENTS.md SPerf). Instead each model shard keeps a running top-k
+    over ITS rows only (scan stays collective-free), and one final
+    [B, n_shards*k] gather + top_k merges the shards: the only cross-device
+    payload is k candidates per shard per user. Exact same top-k semantics
+    (ties aside); scales to tables that can never be replicated.
+    """
+    u = sasrec_user_state(params, seq, cfg, par)  # [B, d]
+    b = u.shape[0]
+    mesh = par.mesh if par is not None else None
+    tp = par.tp_axis if par is not None else None
+
+    def local_chunked_topk(u_loc, rows_tbl, id_base, unroll):
+        """Running top-k of u_loc @ rows_tbl.T over row chunks — pure local
+        math (called per shard under shard_map, or directly meshless)."""
+        rows, d = rows_tbl.shape
+        nc = max(min(n_chunks, rows), 1)
+        while rows % nc:
+            nc -= 1
+        chunk = rows // nc
+        tbl_c = rows_tbl.reshape(nc, chunk, d)
+
+        def body(carry, xs):
+            best_s, best_i = carry  # [B_loc, k]
+            tblj, j = xs
+            s = (u_loc @ tblj.T).astype(jnp.float32)  # [B_loc, chunk]
+            ids = id_base + j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            cat_s = jnp.concatenate([best_s, s], axis=-1)
+            cat_i = jnp.concatenate(
+                [best_i, jnp.broadcast_to(ids, s.shape)], axis=-1
+            )
+            top_s, pos = lax.top_k(cat_s, k)
+            top_i = jnp.take_along_axis(cat_i, pos, axis=-1)
+            return (top_s, top_i), None
+
+        bl = u_loc.shape[0]
+        init = (jnp.full((bl, k), -jnp.inf, jnp.float32),
+                jnp.zeros((bl, k), jnp.int32))
+        (ls, li), _ = lax.scan(
+            body, init, (tbl_c, jnp.arange(nc, dtype=jnp.int32)),
+            unroll=unroll,
+        )
+        return ls, li
+
+    if mesh is not None and tp in getattr(mesh, "shape", {}):
+        # shard_map makes the per-shard top-k local BY CONSTRUCTION.
+        # GSPMD cannot partition the TopK custom call over a sharded
+        # operand: under plain jit it all-gathers the [nsh, B, chunk+k]
+        # running state across `model` EVERY chunk (measured 1.28 TB of
+        # all-gather at B=262k/V=2^20 — see EXPERIMENTS.md SPerf).
+        dp_axes = tuple(a for a in par.dp_axes if a in mesh.shape)
+        v, d = params["item_emb"].shape
+        nsh = mesh.shape[tp]
+        rows = v // nsh
+
+        def shard_body(u_loc, tbl_loc):
+            # u_loc: [B/dp, d]; tbl_loc: [rows, d] — this shard's rows
+            sh = lax.axis_index(tp).astype(jnp.int32)
+            ls, li = local_chunked_topk(u_loc, tbl_loc, sh * rows,
+                                        cfg.scan_unroll)
+            return ls[:, None, :], li[:, None, :]  # [B/dp, 1(shard), k]
+
+        ls, li = jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(P(dp_axes, None), P(tp, None)),
+            out_specs=(P(dp_axes, tp, None), P(dp_axes, tp, None)),
+            # scan carry starts from device-invariant constants; skip the
+            # varying-manual-axes type check (same as core/merge.py)
+            check_vma=False,
+        )(u, params["item_emb"])
+        # cross-shard merge: the ONLY collective — k survivors per shard
+        ms = shard(ls.reshape(b, nsh * k), P(dp_axes, None))
+        mi = shard(li.reshape(b, nsh * k), P(dp_axes, None))
+    else:
+        nsh = n_shards or 1
+        v, d = params["item_emb"].shape
+        rows = v // nsh
+        parts = [
+            local_chunked_topk(u, params["item_emb"][s * rows:(s + 1) * rows],
+                               s * rows, cfg.scan_unroll)
+            for s in range(nsh)
+        ]
+        ms = jnp.concatenate([p[0] for p in parts], axis=-1)
+        mi = jnp.concatenate([p[1] for p in parts], axis=-1)
+    top_s, pos = lax.top_k(ms, k)
+    top_i = jnp.take_along_axis(mi, pos, axis=1)
+    return top_s, top_i
+
+
+def retrieval_scores(params, history, hist_mask, candidates, cfg: SASRecConfig,
+                     par=None):
+    """retrieval_cand: one (or few) users vs 10^6 candidate ids.
+
+    User vector via embedding-bag over history (the kernel-backed op), then
+    SCORE-THEN-COMBINE over the row-sharded table: each model shard dots u
+    against its local candidate hits (zeros elsewhere) and the [B, C_local]
+    *scores* are all-reduced — d x smaller payload than GSPMD's default of
+    all-reducing the gathered candidate EMBEDDINGS (measured 12.5 MB -> 16 KB
+    per device at C=10^6, d=50; EXPERIMENTS.md SPerf)."""
+    u = embedding_bag(params["item_emb"], history, hist_mask, mode="mean")  # [B, d]
+    mesh = par.mesh if par is not None else None
+    tp = par.tp_axis if par is not None else None
+    if mesh is not None and tp in getattr(mesh, "shape", {}):
+        v, d = params["item_emb"].shape
+        nsh = mesh.shape[tp]
+        rows = v // nsh
+        dp_axes = tuple(a for a in par.dp_axes if a in mesh.shape)
+
+        def body(u_, emb_loc, cand):
+            # emb_loc: [rows, d] this shard's rows; cand: [C_loc] candidates
+            sh = lax.axis_index(tp).astype(jnp.int32)
+            loc = cand - sh * rows
+            hit = (loc >= 0) & (loc < rows)
+            ce = jnp.where(hit[:, None],
+                           emb_loc[jnp.clip(loc, 0, rows - 1)], 0.0)
+            s = u_.astype(jnp.float32) @ ce.T.astype(jnp.float32)  # [B, C_loc]
+            return lax.psum(s, tp)  # combine SCORES, not embeddings
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(tp, None), P(dp_axes)),
+            out_specs=P(None, dp_axes),
+            check_vma=False,
+        )(u, params["item_emb"], candidates)
+    ce = jnp.take(params["item_emb"], candidates, axis=0)  # [C, d]
+    return (u.astype(jnp.float32) @ ce.T.astype(jnp.float32))  # [B, C]

@@ -1,0 +1,383 @@
+"""Decoder-only LM family (qwen3 / stablelm / dbrx / qwen3-moe configs).
+
+Implementation notes for scale:
+  * lax.scan over stacked layer params -> one layer's HLO regardless of depth
+    (compile time and HLO size stay flat at 94 layers);
+  * jax.checkpoint around the layer body (full remat) so 4k-32k sequence
+    activations never exceed one layer's working set;
+  * chunked online-softmax attention (no S^2 score tensor) for train/prefill;
+    dense scores against the KV cache for decode (S_q small), with the cache
+    sequence dim sharded over `model` => GSPMD FlashDecoding;
+  * chunked cross entropy (no [B, S, V] logits tensor);
+  * MoE layers are shard_map islands with expert parallelism on `model`.
+
+Sharding: Megatron-style TP via with_sharding_constraint on the flat
+head/ffn dims; embeddings vocab-sharded; batch over ('pod','data').
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    chunked_causal_attention,
+    chunked_cross_entropy,
+    decode_attention,
+    rms_norm,
+    rope,
+    shard,
+    swiglu,
+)
+from repro.models.moe import MoEConfig, make_moe_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    """Mesh + logical axis mapping. CPU tests: Parallelism.none()."""
+
+    mesh: Any = None
+    dp_axes: tuple = ("pod", "data")
+    tp_axis: str = "model"
+
+    @staticmethod
+    def none():
+        return Parallelism(mesh=None, dp_axes=(), tp_axis=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    moe: MoEConfig | None = None
+    param_dtype: str = "bfloat16"
+    attn_chunk: int = 1024
+    loss_chunks: int = 8
+    remat: bool = True
+    # TP head alignment: pad q heads PER KV GROUP so the padded head count
+    # divides the model axis (e.g. qwen3-14b: 40 heads -> 48 under TP-16).
+    # Dead lanes are masked in the forward pass so they are exactly zero in
+    # both forward and backward (the model stays a true n_heads model);
+    # the padding is the price of head-sharded attention on a 16-way axis,
+    # and matches what the MXU would pad to anyway.
+    tp_align: int = 16
+    # Analysis mode: unroll every scan so XLA cost_analysis counts loop
+    # bodies x trip count (probe configs only — see launch/dryrun.py).
+    scan_unroll: bool = False
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def g_real(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def g_padded(self) -> int:
+        """Padded q-heads per kv group: smallest g' >= g with
+        (n_kv_heads * g') % tp_align == 0 (so the head dim TP-shards)."""
+        g = self.g_real
+        if self.tp_align <= 1:
+            return g
+        while (self.n_kv_heads * g) % self.tp_align:
+            g += 1
+        return g
+
+    @property
+    def h_padded(self) -> int:
+        return self.n_kv_heads * self.g_padded
+
+    def head_mask(self):
+        """float mask [h_padded]: 1 for real q heads, 0 for padded lanes.
+        Head layout is kv-grouped: head index = kv * g_padded + j."""
+        if self.h_padded == self.n_heads:
+            return None
+        j = jnp.arange(self.h_padded) % self.g_padded
+        return (j < self.g_real).astype(jnp.float32)
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model FLOPs)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * self.n_heads * dh * 2 + d * self.n_kv_heads * dh * 2
+        if self.moe:
+            ffn = d * self.moe.n_experts * self.moe.d_ff_expert * 3 + d * self.moe.n_experts
+        else:
+            ffn = d * self.d_ff * 3
+        norms = 2 * d + (2 * dh if self.qk_norm else 0)
+        return self.n_layers * (attn + ffn + norms) + self.vocab * d + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        dense = self.n_params() - self.n_layers * (
+            d * self.moe.n_experts * self.moe.d_ff_expert * 3
+        )
+        return dense + self.n_layers * d * self.moe.top_k * self.moe.d_ff_expert * 3
+
+
+# --------------------------------------------------------------------- params
+def init_params(cfg: LMConfig, key) -> dict:
+    d, dh = cfg.d_model, cfg.d_head
+    h, kv, L = cfg.h_padded, cfg.n_kv_heads, cfg.n_layers
+    dt = cfg.dtype
+    ks = iter(jax.random.split(key, 16))
+    sig = 0.02
+    out_sig = sig / math.sqrt(2 * L)
+
+    def norm(*shape):
+        return jnp.ones(shape, dt)
+
+    # Attention weights are HEAD-MAJOR 3D/4D ([d, h, dh] / [h, dh, d]) so the
+    # head dim is a real tensor dim GSPMD can shard over `model`. With the
+    # flat [d, h*dh] layout, 40 heads x 128 dh / 16-way TP = 320 columns
+    # (2.5 heads) per device: the reshape to heads misaligns and GSPMD
+    # falls back to sharding the d_head CONTRACTION dim, all-reducing the
+    # S^2-sized score tensor every layer (measured 43 GB/layer at 32k;
+    # see EXPERIMENTS.md SPerf iteration 1).
+    layers = {
+        "attn_norm": norm(L, d),
+        "wq": jax.random.normal(next(ks), (L, d, h, dh), dt) * sig,
+        "wk": jax.random.normal(next(ks), (L, d, kv, dh), dt) * sig,
+        "wv": jax.random.normal(next(ks), (L, d, kv, dh), dt) * sig,
+        "wo": jax.random.normal(next(ks), (L, h, dh, d), dt) * out_sig,
+        "mlp_norm": norm(L, d),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = norm(L, dh)
+        layers["k_norm"] = norm(L, dh)
+    if cfg.moe:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        layers["router"] = jax.random.normal(next(ks), (L, d, e), dt) * sig
+        layers["we_gate"] = jax.random.normal(next(ks), (L, e, d, fe), dt) * sig
+        layers["we_in"] = jax.random.normal(next(ks), (L, e, d, fe), dt) * sig
+        layers["we_out"] = jax.random.normal(next(ks), (L, e, fe, d), dt) * out_sig
+    else:
+        layers["w_gate"] = jax.random.normal(next(ks), (L, d, cfg.d_ff), dt) * sig
+        layers["w_in"] = jax.random.normal(next(ks), (L, d, cfg.d_ff), dt) * sig
+        layers["w_out"] = jax.random.normal(next(ks), (L, cfg.d_ff, d), dt) * out_sig
+    return {
+        "embed": jax.random.normal(next(ks), (cfg.vocab, d), dt) * sig,
+        "final_norm": norm(d),
+        "layers": layers,
+    }
+
+
+def param_specs(cfg: LMConfig, par: Parallelism) -> dict:
+    """PartitionSpec pytree mirroring init_params (vocab/tp sharding)."""
+    tp = par.tp_axis
+    layers = {
+        "attn_norm": P(None, None),
+        # head-sharded Q / O (head dim pads 40 -> 48 under 16-way TP);
+        # K/V projections replicated: kv=8 < tp=16 and the weights are
+        # ~10 MB/layer, so replication costs nothing and keeps K/V local
+        # to every device (no gather before the QK einsum).
+        "wq": P(None, None, tp, None),
+        "wk": P(None, None, None, None),
+        "wv": P(None, None, None, None),
+        "wo": P(None, tp, None, None),
+        "mlp_norm": P(None, None),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = P(None, None)
+        layers["k_norm"] = P(None, None)
+    if cfg.moe:
+        layers["router"] = P(None, None, None)
+        layers["we_gate"] = P(None, tp, None, None)
+        layers["we_in"] = P(None, tp, None, None)
+        layers["we_out"] = P(None, tp, None, None)
+    else:
+        layers["w_gate"] = P(None, None, tp)
+        layers["w_in"] = P(None, None, tp)
+        layers["w_out"] = P(None, tp, None)
+    return {
+        "embed": P(tp, None),
+        "final_norm": P(None),
+        "layers": layers,
+    }
+
+
+# -------------------------------------------------------------------- forward
+def _attention_block(x, lp, cfg: LMConfig, par: Parallelism, positions,
+                     cache=None, valid_len=None, return_kv=False,
+                     differentiable=True):
+    b, s, d = x.shape
+    h, kv, dh = cfg.h_padded, cfg.n_kv_heads, cfg.d_head
+    dp = par.dp_axes
+    tp = par.tp_axis
+    hmask = cfg.head_mask()
+
+    hn = rms_norm(x, lp["attn_norm"])
+    # q born head-sharded; k, v born replicated (head-major weights).
+    q = shard(jnp.einsum("bsd,dhk->bshk", hn, lp["wq"]), P(dp, None, tp, None))
+    k = jnp.einsum("bsd,dhk->bshk", hn, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hn, lp["wv"])
+    if hmask is not None:
+        # zero the padded q lanes so they are dead in fwd AND bwd
+        q = q * hmask[None, None, :, None].astype(q.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q, k = rope(q, k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        o = chunked_causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                                     unroll=cfg.scan_unroll,
+                                     differentiable=differentiable)
+        if return_kv:
+            new_cache = (k, v)
+    else:
+        ck, cv = cache  # [B, Smax, KV, dh], seq dim sharded over tp
+        pos0 = valid_len - s
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, pos0, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, pos0, 0, 0))
+        ck = shard(ck, P(dp, tp, None, None))
+        cv = shard(cv, P(dp, tp, None, None))
+        o = decode_attention(q, ck, cv, valid_len)
+        new_cache = (ck, cv)
+    o = shard(o, P(dp, None, tp, None))  # [B, S, H, dh] head-sharded
+    if hmask is not None:
+        # padded lanes see uniform-softmax garbage; mask before wo so
+        # neither the output nor d(wo) picks them up
+        o = o * hmask[None, None, :, None].astype(o.dtype)
+    # contraction over (head, dh) both local per shard -> one all-reduce
+    out = shard(jnp.einsum("bshk,hkd->bsd", o, lp["wo"]), P(dp, None, None))
+    return out, new_cache
+
+
+def _make_layer_fn(cfg: LMConfig, par: Parallelism, decode: bool,
+                   return_kv: bool = False, differentiable: bool = True):
+    moe_layer = make_moe_layer(par.mesh, par.dp_axes, par.tp_axis, cfg.moe) if cfg.moe else None
+    dp, tp = par.dp_axes, par.tp_axis
+
+    def layer(carry, lp_and_cache):
+        if decode:
+            lp, ck, cv = lp_and_cache
+            x, positions, valid_len, aux = carry
+            attn_out, (nck, ncv) = _attention_block(
+                x, lp, cfg, par, positions, cache=(ck, cv), valid_len=valid_len
+            )
+        else:
+            lp = lp_and_cache
+            x, positions, aux = carry
+            attn_out, kv = _attention_block(
+                x, lp, cfg, par, positions, return_kv=return_kv,
+                differentiable=differentiable,
+            )
+        x = x + attn_out
+        hn = rms_norm(x, lp["mlp_norm"])
+        if cfg.moe:
+            ffn_out, aux_l = moe_layer(
+                hn, lp["router"], lp["we_gate"], lp["we_in"], lp["we_out"]
+            )
+            aux = aux + aux_l
+        else:
+            hmid = shard(
+                jax.nn.silu(hn @ lp["w_gate"]) * (hn @ lp["w_in"]),
+                P(dp, None, tp),
+            )
+            ffn_out = hmid @ lp["w_out"]
+        x = shard(x + ffn_out, P(dp, None, None))
+        if decode:
+            return (x, positions, valid_len, aux), (nck, ncv)
+        return (x, positions, aux), (kv if return_kv else None)
+
+    return layer
+
+
+def forward(params, tokens, cfg: LMConfig, par: Parallelism):
+    """tokens: int32[B, S] -> final hidden [B, S, D] (+ aux loss)."""
+    dp = par.dp_axes
+    x = shard(jnp.take(params["embed"], tokens, axis=0), P(dp, None, None))
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+    layer = _make_layer_fn(cfg, par, decode=False)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    (x, _, aux), _ = lax.scan(layer, (x, positions, jnp.zeros((), jnp.float32)),
+                              params["layers"], unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"])
+    return x, aux
+
+
+def forward_with_kv(params, tokens, cfg: LMConfig, par: Parallelism):
+    """Prefill forward: final hidden [B, S, D] + per-layer KV stacks
+    ([L, B, S, KV, dh] x2) for cache construction."""
+    dp = par.dp_axes
+    x = shard(jnp.take(params["embed"], tokens, axis=0), P(dp, None, None))
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape
+    )
+    # prefill is inference-only: the block-triangular attention may use a
+    # dynamic-bound inner loop (not reverse-differentiable, 2x less work)
+    layer = _make_layer_fn(cfg, par, decode=False, return_kv=True,
+                           differentiable=False)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    (x, _, _), kv = lax.scan(
+        layer, (x, positions, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=cfg.scan_unroll,
+    )
+    x = rms_norm(x, params["final_norm"])
+    return x, kv
+
+
+def lm_loss(params, batch, cfg: LMConfig, par: Parallelism, aux_weight: float = 0.01):
+    """batch: {'tokens': [B, S+1]} -> scalar loss."""
+    tokens = batch["tokens"][:, :-1]
+    targets = batch["tokens"][:, 1:]
+    x, aux = forward(params, tokens, cfg, par)
+    ce = chunked_cross_entropy(x, params["embed"], targets, cfg.loss_chunks,
+                               unroll=cfg.scan_unroll)
+    return ce + aux_weight * aux / max(cfg.n_layers, 1)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, s_max: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+def cache_specs(cfg: LMConfig, par: Parallelism):
+    dp, tp = par.dp_axes, par.tp_axis
+    s = P(None, dp, tp, None, None)  # sequence-sharded KV (FlashDecoding)
+    return s, s
+
+
+def decode_step(params, cache, tokens, valid_len, cfg: LMConfig, par: Parallelism):
+    """One serving step. tokens: [B, S_new] (S_new=1 for pure decode);
+    valid_len: int32[] total valid positions *after* this step.
+    Returns (logits [B, V] for the last position, new cache)."""
+    dp = par.dp_axes
+    b, s = tokens.shape
+    x = shard(jnp.take(params["embed"], tokens, axis=0), P(dp, None, None))
+    positions = (valid_len - s) + jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32), (b, s)
+    )
+    layer = _make_layer_fn(cfg, par, decode=True)
+    ck, cv = cache
+    (x, _, _, _), (nck, ncv) = lax.scan(
+        layer,
+        (x, positions, valid_len, jnp.zeros((), jnp.float32)),
+        (params["layers"], ck, cv),
+        unroll=cfg.scan_unroll,
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = x[:, -1, :].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return shard(logits, P(dp, None)), (nck, ncv)

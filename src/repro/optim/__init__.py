@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.optim.schedule import cosine_schedule
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+]

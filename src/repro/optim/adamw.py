@@ -1,0 +1,107 @@
+"""Pure-JAX AdamW with mixed precision and ZeRO-1-style state sharding.
+
+Params may live in bf16 (compute dtype); the optimizer keeps fp32 master
+weights + moments. At scale the moments/master are additionally sharded over
+the data axis (``zero1_specs``) — the states are only ever touched inside the
+update, so sharding them over `data` is free bandwidth-wise and cuts the
+optimizer memory by dp_size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics). grads may be bf16; math fp32."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, mw):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        mw = mw - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * mw)
+        return m, v, mw
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    mw = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), mw, params)
+    new_state = {"step": step, "master": mw, "m": m, "v": v}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+
+def zero1_specs(param_specs, dp_axis: str = "data", params_shapes=None,
+                dp_size: int | None = None):
+    """Add ZeRO-1 sharding: shard each state leaf's first unsharded dim whose
+    size divides evenly over the data axis (moments + master are only
+    read/written inside the update, so this is free bandwidth-wise).
+
+    params_shapes (pytree of .shape, e.g. from jax.eval_shape) + dp_size make
+    the choice divisibility-aware; without them the first free dim is used.
+    """
+
+    def add_dp(spec: P, shape=None) -> P:
+        parts = list(spec)
+        for i, p in enumerate(parts):
+            if p is not None:
+                continue
+            if shape is not None and dp_size is not None and shape[i] % dp_size:
+                continue  # not divisible: try the next free dim
+            parts[i] = dp_axis
+            return P(*parts)
+        return spec  # nothing shardable
+
+    if params_shapes is not None:
+        state_spec = jax.tree.map(
+            lambda spec, sds: add_dp(spec, sds.shape),
+            param_specs,
+            params_shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    else:
+        state_spec = jax.tree.map(add_dp, param_specs)
+    return {
+        "step": P(),
+        "master": state_spec,
+        "m": state_spec,
+        "v": state_spec,
+    }

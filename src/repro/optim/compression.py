@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam style, relaxed
+to 8 bits) for the data-parallel all-reduce.
+
+At 512 chips the DP gradient all-reduce moves ~2 bytes/param/step (bf16);
+int8 halves the DCI bytes. The quantization error is fed back into the next
+step's gradient (error-feedback), which provably preserves SGD convergence
+rates and empirically preserves Adam's.
+
+Usage in the train step:
+    q, scale, new_err = compress_int8(grad, err)
+    q_sum = psum(q)  # int8 payload on the wire (int32 accumulate)
+    grad_hat = decompress_int8(q_sum, psum(scale)) / n_devices
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g, err=None):
+    """Per-tensor symmetric int8 quantization. Returns (q int8, scale f32,
+    new_err) where new_err = g - dequant(q) (feed into the next step)."""
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads, errs, axis_name):
+    """Error-feedback compressed all-reduce over a pytree (shard_map body).
+
+    Wire format per leaf: int8 payload + one f32 scale. Accumulation happens
+    in int32 (psum of int8-as-int32), then a single dequant by the max scale.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    def one(g, e):
+        q, scale, new_err = compress_int8(g, e)
+        # shared scale: max over devices so the int8 grid is consistent
+        scale = lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round((g.astype(jnp.float32) + (e if e is not None else 0)) / scale), -127, 127)
+        new_err = (g.astype(jnp.float32) + (e if e is not None else 0)) - q * scale
+        total = lax.psum(q.astype(jnp.int32), axis_name)
+        n = lax.psum(jnp.ones((), jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * scale / n).astype(g.dtype), new_err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs) if errs is not None else [None] * len(flat_g)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = tdef.unflatten([o[0] for o in out])
+    new_e = tdef.unflatten([o[1] for o in out])
+    return new_g, new_e

@@ -1,0 +1,4 @@
+from repro.runtime.watchdog import StepWatchdog
+from repro.runtime.failures import FailureInjector
+
+__all__ = ["StepWatchdog", "FailureInjector"]

@@ -1,0 +1,23 @@
+"""Failure injection for the restart path (tests + chaos drills).
+
+``FailureInjector`` raises a simulated host failure at a chosen step; the
+training driver's restart loop (launch/train.py) must recover from the last
+checkpoint and converge to the same final state as an uninterrupted run —
+that equivalence is asserted in tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_steps: set[int] | None = None):
+        self.fail_at = set(fail_at_steps or ())
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected host failure at step {step}")

@@ -1,0 +1,42 @@
+"""Straggler mitigation: per-step deadline watchdog.
+
+At pod scale a slow host (thermal throttle, failing HBM, network flap) shows
+up as a step-time outlier on *every* host (SPMD barrier). The watchdog keeps
+an EWMA of step time; a step exceeding ``threshold x`` the EWMA triggers the
+``on_straggle`` callback — in production that escalates to the cluster
+controller (drain + replace host, or re-mesh via checkpoint restore; see
+launch/train.py --elastic); here it also feeds the test harness.
+"""
+from __future__ import annotations
+
+import time
+
+
+class StepWatchdog:
+    def __init__(self, threshold: float = 3.0, ewma: float = 0.9,
+                 warmup_steps: int = 3, on_straggle=None):
+        self.threshold = threshold
+        self.ewma_coef = ewma
+        self.warmup = warmup_steps
+        self.on_straggle = on_straggle
+        self.avg = None
+        self.count = 0
+        self.events: list[dict] = []
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int):
+        dt = time.monotonic() - self._t0
+        self.count += 1
+        if self.count <= self.warmup:
+            self.avg = dt if self.avg is None else max(self.avg, dt)
+            return dt
+        if dt > self.threshold * self.avg:
+            ev = {"step": step, "dt": dt, "avg": self.avg}
+            self.events.append(ev)
+            if self.on_straggle:
+                self.on_straggle(ev)
+        self.avg = self.ewma_coef * self.avg + (1 - self.ewma_coef) * dt
+        return dt

@@ -1,0 +1,15 @@
+from repro.training.steps import (
+    make_gnn_train_step,
+    make_lm_decode_step,
+    make_lm_prefill_step,
+    make_lm_train_step,
+    make_recsys_steps,
+)
+
+__all__ = [
+    "make_lm_train_step",
+    "make_lm_prefill_step",
+    "make_lm_decode_step",
+    "make_gnn_train_step",
+    "make_recsys_steps",
+]

@@ -1,0 +1,115 @@
+"""Step builders: model loss + AdamW into single jit-able train/serve steps.
+
+These are the functions the launcher jits, the dry-run lowers, and the smoke
+tests execute. Every builder returns pure functions of (params, opt_state,
+batch) so checkpoints capture the complete training state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def _train_step(loss_fn, opt_cfg: AdamWConfig, total_steps: int, warmup: int):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr_scale = cosine_schedule(opt_state["step"], warmup=warmup, total=total_steps)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+# ------------------------------------------------------------------------- LM
+def make_lm_train_step(cfg: tfm.LMConfig, par: tfm.Parallelism,
+                       opt_cfg: AdamWConfig = AdamWConfig(),
+                       total_steps: int = 10_000, warmup: int = 200):
+    def loss_fn(params, batch):
+        return tfm.lm_loss(params, batch, cfg, par)
+
+    return _train_step(loss_fn, opt_cfg, total_steps, warmup)
+
+
+def make_lm_prefill_step(cfg: tfm.LMConfig, par: tfm.Parallelism, s_max: int):
+    """Prefill: consume the prompt with chunked attention, emit the filled KV
+    cache + last-position logits (the serving 'prompt' phase)."""
+
+    def prefill(params, tokens):
+        b, s = tokens.shape
+        x, kv = tfm.forward_with_kv(params, tokens, cfg, par)
+        logits = x[:, -1].astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+        ck, cv = kv  # [L, B, S, KV, dh]
+        pad = s_max - s
+        if pad > 0:
+            ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, (ck, cv)
+
+    return prefill
+
+
+def make_lm_decode_step(cfg: tfm.LMConfig, par: tfm.Parallelism):
+    def decode(params, cache, tokens, valid_len):
+        return tfm.decode_step(params, cache, tokens, valid_len, cfg, par)
+
+    return decode
+
+
+# ------------------------------------------------------------------------ GNN
+def make_gnn_train_step(cfg: gnn_mod.GNNConfig, par, mode: str = "full",
+                        opt_cfg: AdamWConfig = AdamWConfig(lr=1e-3),
+                        total_steps: int = 1000, warmup: int = 20):
+    if mode == "full":
+        if cfg.arch == "egnn":
+            def loss_fn(params, batch):
+                pred, _ = gnn_mod.egnn_forward(params, batch, cfg)
+                return jnp.mean((pred - batch["target"]) ** 2)
+        else:
+            def loss_fn(params, batch):
+                return gnn_mod.node_classification_loss(params, batch, cfg, par)
+    elif mode == "sampled":
+        def loss_fn(params, batch):
+            return gnn_mod.sage_minibatch_loss(params, batch, cfg, par)
+    elif mode == "batched":
+        if cfg.arch == "egnn":
+            def loss_fn(params, batch):
+                return gnn_mod.egnn_batch_loss(params, batch, cfg, par)
+        else:
+            def loss_fn(params, batch):
+                def one(g):
+                    logits = gnn_mod.FORWARDS[cfg.arch](params, g, cfg)
+                    return jnp.mean(logits, axis=0)  # mean-pool readout
+                pooled = jax.vmap(one)(batch["graphs"])  # [G, C]
+                return jnp.mean((pooled[:, 0] - batch["targets"]) ** 2)
+    else:
+        raise ValueError(mode)
+    return _train_step(loss_fn, opt_cfg, total_steps, warmup)
+
+
+# --------------------------------------------------------------------- recsys
+def make_recsys_steps(cfg: rec_mod.SASRecConfig, par,
+                      opt_cfg: AdamWConfig = AdamWConfig(lr=1e-3),
+                      total_steps: int = 10_000, warmup: int = 100):
+    def loss_fn(params, batch):
+        return rec_mod.sasrec_train_loss(params, batch, cfg, par)
+
+    train = _train_step(loss_fn, opt_cfg, total_steps, warmup)
+
+    def serve(params, seq):
+        return rec_mod.serve_scores(params, seq, cfg, par)
+
+    def bulk(params, seq):
+        return rec_mod.serve_bulk_topk(params, seq, cfg, par)
+
+    def retrieval(params, history, hist_mask, candidates):
+        return rec_mod.retrieval_scores(params, history, hist_mask, candidates, cfg, par)
+
+    return {"train": train, "serve": serve, "bulk": bulk, "retrieval": retrieval}

@@ -1,0 +1,92 @@
+"""Bridge finding: host DFS + device PRAM extraction vs networkx oracle."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import find_bridges
+from repro.core.bridges_device import bridge_mask_device, bridges_device
+from repro.core.bridges_host import bridges_dfs
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+
+from helpers import bucketed_graph, nx_bridges, to_pair_set
+
+
+@given(st.integers(0, 10_000))
+def test_host_dfs_matches_networkx(seed):
+    src, dst, n, _ = bucketed_graph(seed)
+    assert bridges_dfs(src, dst, n) == nx_bridges(src, dst, n)
+
+
+@given(st.integers(0, 10_000))
+def test_device_matches_host(seed):
+    src, dst, n, el = bucketed_graph(seed)
+    assert to_pair_set(bridges_device(el)) == bridges_dfs(src, dst, n)
+
+
+@given(st.integers(0, 10_000))
+def test_device_multigraph(seed):
+    """Parallel edges + self loops (device path; networkx can't do this)."""
+    src, dst, n, el = bucketed_graph(seed, simple=False)
+    assert to_pair_set(bridges_device(el)) == bridges_dfs(src, dst, n)
+
+
+def test_tree_all_bridges():
+    src, dst = gen.tree_graph(80, seed=2)
+    el = EdgeList.from_arrays(src, dst, 80)
+    assert len(to_pair_set(bridges_device(el))) == 79
+
+
+def test_barbell_planted():
+    src, dst, want, n = gen.barbell(10, 7)
+    assert to_pair_set(bridges_device(EdgeList.from_arrays(src, dst, n))) == want
+
+
+def test_planted_bridges_dense():
+    src, dst, planted = gen.planted_bridge_graph(300, 8000, 6, seed=11)
+    got = to_pair_set(bridges_device(EdgeList.from_arrays(src, dst, 300)))
+    assert planted <= got
+    assert got == nx_bridges(src, dst, 300)
+
+
+def test_duplicated_graph_has_no_bridges():
+    src, dst, _ = gen.planted_bridge_graph(100, 1000, 3, seed=5)
+    src2 = np.concatenate([src, src])
+    dst2 = np.concatenate([dst, dst])
+    assert to_pair_set(bridges_device(EdgeList.from_arrays(src2, dst2, 100))) == set()
+
+
+def test_cycle_has_no_bridges():
+    n = 31
+    src = np.arange(n, dtype=np.int32)
+    dst = (np.arange(n, dtype=np.int32) + 1) % n
+    assert to_pair_set(bridges_device(EdgeList.from_arrays(src, dst, n))) == set()
+
+
+def test_bridge_mask_slots_align():
+    src, dst, want, n = gen.barbell(6, 3)
+    el = EdgeList.from_arrays(src, dst, n)
+    bm = np.asarray(bridge_mask_device(el))
+    got = set(
+        (int(min(a, b)), int(max(a, b)))
+        for a, b in zip(src[bm[: len(src)]], dst[bm[: len(src)]])
+    )
+    assert got == want
+
+
+def test_public_api_single_device():
+    src, dst, planted = gen.planted_bridge_graph(90, 900, 4, seed=3)
+    want = nx_bridges(src, dst, 90)
+    assert find_bridges(src, dst, 90) == want
+    assert find_bridges(src, dst, 90, final="device") == want
+
+
+def test_dense_graph_few_bridges():
+    """The paper's regime: |E| >> |V|. Complete graph + one pendant vertex."""
+    n = 60
+    iu = np.triu_indices(n - 1, k=1)
+    src = iu[0].astype(np.int32)
+    dst = iu[1].astype(np.int32)
+    src = np.concatenate([src, np.array([0], np.int32)])
+    dst = np.concatenate([dst, np.array([n - 1], np.int32)])
+    got = to_pair_set(bridges_device(EdgeList.from_arrays(src, dst, n)))
+    assert got == {(0, n - 1)}

@@ -1,0 +1,102 @@
+"""Euler-tour machinery invariants against a numpy recursive-DFS oracle."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.euler import build_sparse_table, euler_tour, range_reduce
+from repro.core.forest import spanning_forest
+from repro.graph import generators as gen
+from repro.graph.datastructs import INF32, EdgeList
+
+import jax.numpy as jnp
+
+
+def _tour_inputs(n, seed):
+    src, dst = gen.tree_graph(n, seed=seed)
+    el = EdgeList.from_arrays(src, dst, n)
+    tmask, labels = spanning_forest(el)
+    return el, jnp.asarray(tmask), jnp.asarray(labels)
+
+
+@given(st.sampled_from([2, 3, 7, 16, 48, 96, 200]))
+def test_tour_positions_are_a_permutation(n):
+    el, tmask, labels = _tour_inputs(n, seed=n)
+    tour = euler_tour(el.src, el.dst, tmask, labels, n)
+    gpos = np.asarray(tour["gpos"])
+    valid = gpos < INF32
+    assert valid.sum() == 2 * (n - 1)
+    assert set(gpos[valid].tolist()) == set(range(2 * (n - 1)))
+    assert int(tour["total"]) == 2 * (n - 1)
+
+
+@given(st.sampled_from([2, 3, 7, 16, 48, 96, 200]))
+def test_disc_unique_and_subtree_intervals(n):
+    """disc is unique per vertex; each tree edge's child subtree == the
+    vertices whose disc falls in (lo, hi] — checked against numpy DFS."""
+    el, tmask, labels = _tour_inputs(n, seed=n + 1)
+    tour = euler_tour(el.src, el.dst, tmask, labels, n)
+    disc = np.asarray(tour["disc"])
+    gpos = np.asarray(tour["gpos"])
+    assert len(set(disc.tolist())) == n  # unique discovery times
+
+    # numpy oracle: subtree sets via adjacency DFS from vertex with disc==min
+    src, dst = np.asarray(el.src), np.asarray(el.dst)
+    adj = {v: [] for v in range(n)}
+    for i, (u, v) in enumerate(zip(src, dst)):
+        adj[int(u)].append((int(v), i))
+        adj[int(v)].append((int(u), i))
+
+    root = int(np.argmin(disc))
+    parent = {root: None}
+    order = [root]
+    stack = [root]
+    while stack:
+        u = stack.pop()
+        for w, _ in adj[u]:
+            if w not in parent:
+                parent[w] = u
+                order.append(w)
+                stack.append(w)
+    # subtree membership by propagation in reverse order
+    subtree = {v: {v} for v in range(n)}
+    for v in reversed(order):
+        if parent[v] is not None:
+            subtree[parent[v]] |= subtree[v]
+
+    lo = np.minimum(gpos[0::2], gpos[1::2])
+    hi = np.maximum(gpos[0::2], gpos[1::2])
+    for i, (u, v) in enumerate(zip(src, dst)):
+        child = int(v) if parent.get(int(v)) == int(u) else int(u)
+        want = subtree[child]
+        got = {w for w in range(n) if lo[i] < disc[w] <= hi[i]}
+        assert got == want, f"edge {i} ({u},{v}) child={child}"
+
+
+def test_sparse_table_range_queries():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1000, 257).astype(np.int32)
+    t = build_sparse_table(jnp.asarray(vals), jnp.minimum, INF32)
+    los, his = [], []
+    for _ in range(200):
+        a, b = sorted(rng.integers(0, 257, 2).tolist())
+        los.append(a)
+        his.append(b)
+    got = np.asarray(
+        range_reduce(t, jnp.asarray(los, jnp.int32), jnp.asarray(his, jnp.int32), jnp.minimum)
+    )
+    want = np.array([vals[a : b + 1].min() for a, b in zip(los, his)])
+    assert np.array_equal(got, want)
+
+
+def test_forest_with_multiple_components():
+    # two separate trees
+    src = np.array([0, 1, 4, 5], np.int32)
+    dst = np.array([1, 2, 5, 6], np.int32)
+    n = 8  # vertices 3, 7 isolated
+    el = EdgeList.from_arrays(src, dst, n)
+    tmask, labels = spanning_forest(el)
+    tour = euler_tour(el.src, el.dst, jnp.asarray(tmask), jnp.asarray(labels), n)
+    disc = np.asarray(tour["disc"])
+    assert disc[3] == INF32 and disc[7] == INF32
+    active = disc[disc < INF32]
+    assert len(set(active.tolist())) == 6
+    assert int(tour["total"]) == 8  # 4 edges -> 8 arcs

@@ -1,0 +1,91 @@
+"""Spanning-forest properties: acyclic, component-spanning, label-correct."""
+import networkx as nx
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.forest import connected_components, spanning_forest
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+
+from helpers import bucketed_graph, to_graph
+
+
+def check_forest(src, dst, n, el):
+    fmask, labels = spanning_forest(el)
+    fmask, labels = np.asarray(fmask), np.asarray(labels)
+    emask = np.asarray(el.mask)
+    fs = np.asarray(el.src)[fmask & emask]
+    fd = np.asarray(el.dst)[fmask & emask]
+    G = to_graph(src, dst, n)
+    F = to_graph(fs, fd, n)
+    assert nx.is_forest(F)
+    assert nx.number_connected_components(F) == nx.number_connected_components(G)
+    for comp in nx.connected_components(G):
+        assert len({int(labels[v]) for v in comp}) == 1
+    assert len(set(labels.tolist())) == nx.number_connected_components(G)
+
+
+@given(st.integers(0, 10_000))
+def test_forest_random(seed):
+    src, dst, n, el = bucketed_graph(seed)
+    check_forest(src, dst, n, el)
+
+
+@given(st.integers(0, 10_000))
+def test_forest_multigraph_selfloops(seed):
+    """Duplicates + self loops must not break acyclicity/spanning."""
+    src, dst, n, el = bucketed_graph(seed, simple=False)
+    check_forest(src, dst, n, el)
+
+
+def test_forest_tree_keeps_all_edges():
+    src, dst = gen.tree_graph(60, seed=3)
+    el = EdgeList.from_arrays(src, dst, 60)
+    fmask, _ = spanning_forest(el)
+    assert bool(np.asarray(fmask).all())
+
+
+def test_forest_all_masked():
+    el = EdgeList(
+        np.zeros(4, np.int32), np.zeros(4, np.int32), np.zeros(4, bool), 5
+    )
+    fmask, labels = spanning_forest(el)
+    assert not np.asarray(fmask).any()
+    assert np.array_equal(np.asarray(labels), np.arange(5))
+
+
+def test_connected_components_matches_networkx():
+    src, dst = gen.random_graph(70, 60, seed=9)
+    labels = np.asarray(connected_components(EdgeList.from_arrays(src, dst, 70)))
+    G = to_graph(src, dst, 70)
+    for comp in nx.connected_components(G):
+        assert len({int(labels[v]) for v in comp}) == 1
+
+
+@given(st.integers(0, 10_000))
+def test_warm_start_forest_extends_to_union(seed):
+    """Incremental primitive: forest(B | init_labels=labels(F_A)) joined
+    with F_A must be a spanning forest of A ∪ B (the invariant the
+    warm-start merge rests on)."""
+    from repro.core.forest import spanning_forest_ex
+
+    src_a, dst_a, n, el_a = bucketed_graph(seed)
+    src_b, dst_b = gen.random_graph(n, max(len(src_a) // 2, 1), seed=seed + 3)
+    el_b = EdgeList.from_arrays(src_b, dst_b, n)
+
+    fa, labels_a, _ = spanning_forest_ex(el_a)
+    fd, labels_u, rounds = spanning_forest_ex(el_b, init_labels=labels_a)
+    fa, fd = np.asarray(fa), np.asarray(fd)
+
+    fs = np.concatenate([src_a[fa[: len(src_a)] & np.asarray(el_a.mask)[: len(src_a)]],
+                         src_b[fd[: len(src_b)]]])
+    fdst = np.concatenate([dst_a[fa[: len(src_a)] & np.asarray(el_a.mask)[: len(src_a)]],
+                           dst_b[fd[: len(src_b)]]])
+    U = to_graph(np.concatenate([src_a, src_b]), np.concatenate([dst_a, dst_b]), n)
+    F = to_graph(fs, fdst, n)
+    assert nx.is_forest(F)
+    assert nx.number_connected_components(F) == nx.number_connected_components(U)
+    # labels after the warm-started pass = components of the union
+    labels_u = np.asarray(labels_u)
+    for comp in nx.connected_components(U):
+        assert len({int(labels_u[v]) for v in comp}) == 1

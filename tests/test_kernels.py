@@ -1,0 +1,130 @@
+"""Per-kernel shape/dtype sweeps: Pallas interpret=True vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.segment_min.kernel import segment_min_pallas
+from repro.kernels.segment_min.ref import segment_min_ref
+
+
+# ---------------------------------------------------------------- segment_min
+@pytest.mark.parametrize(
+    "e,n", [(7, 3), (100, 30), (1024, 512), (1500, 513), (4096, 1024), (33, 1)]
+)
+def test_segment_min_shapes(e, n):
+    rng = np.random.default_rng(e * 31 + n)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, e), jnp.int32)
+    ids = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    got = segment_min_pallas(keys, ids, n, interpret=True)
+    want = segment_min_ref(keys, ids, n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_min_empty_segments_inf():
+    keys = jnp.asarray([5, 3], jnp.int32)
+    ids = jnp.asarray([0, 0], jnp.int32)
+    out = np.asarray(segment_min_pallas(keys, ids, 4, interpret=True))
+    assert out[0] == 3 and (out[1:] == np.iinfo(np.int32).max).all()
+
+
+@given(st.integers(0, 1000))
+def test_segment_min_property(seed):
+    rng = np.random.default_rng(seed)
+    e, n = 512, 128  # fixed shapes: avoid per-example recompiles
+    keys = jnp.asarray(rng.integers(0, 1 << 15, e), jnp.int32)
+    ids = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    got = segment_min_pallas(keys, ids, n, interpret=True)
+    want = segment_min_ref(keys, ids, n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------ flash attention
+CASES = [
+    # b, sq, skv, hq, hkv, d
+    (2, 64, 64, 4, 2, 32),     # GQA group 2
+    (1, 128, 128, 8, 1, 64),   # MQA
+    (1, 1, 96, 4, 2, 32),      # decode: one query vs cache
+    (2, 17, 63, 2, 2, 16),     # ragged, non-block-aligned
+    (1, 256, 256, 2, 2, 128),  # MXU-aligned d_head=128
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(case, causal):
+    b, sq, skv, hq, hkv, d = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % (1 << 31)), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, interpret=True,
+                                 q_block=32, kv_block=32)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, interpret=True, q_block=32, kv_block=32)
+    want = attention_ref(q, k, v)
+    # bf16 storage, fp32 accumulation in both paths
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_attention_block_shape_invariance():
+    """Result must not depend on the tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (1, 96, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 96, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 96, 2, 32), jnp.float32)
+    a = flash_attention_pallas(q, k, v, interpret=True, q_block=32, kv_block=32)
+    b = flash_attention_pallas(q, k, v, interpret=True, q_block=96, kv_block=48)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+# -------------------------------------------------------------- embedding bag
+@pytest.mark.parametrize("mode", ["sum", "mean", "max"])
+@pytest.mark.parametrize("b,l,v,d", [(13, 7, 1000, 32), (8, 1, 64, 16), (3, 50, 4096, 64)])
+def test_embedding_bag_matches_ref(mode, b, l, v, d):
+    rng = np.random.default_rng(b * l)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, v, (b, l)), jnp.int32)
+    mask = jnp.asarray(rng.random((b, l)) > 0.3)
+    got = embedding_bag_pallas(table, idx, mask, mode=mode, interpret=True)
+    want = embedding_bag_ref(table, idx, mask, mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_embedding_bag_all_masked_bag():
+    table = jnp.ones((10, 4), jnp.float32)
+    idx = jnp.zeros((2, 3), jnp.int32)
+    mask = jnp.asarray([[True, True, False], [False, False, False]])
+    for mode in ("sum", "mean", "max"):
+        out = np.asarray(embedding_bag_pallas(table, idx, mask, mode=mode, interpret=True))
+        assert np.isfinite(out).all(), mode
+        assert out[1].sum() == 0.0  # empty bag pools to zero
+
+
+# ------------------------------------------------- kernel-backed ops dispatch
+def test_ops_wrappers_run_on_cpu():
+    from repro.kernels.embedding_bag import embedding_bag
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.segment_min import segment_min
+
+    out = segment_min(jnp.asarray([3, 1], jnp.int32), jnp.asarray([0, 0], jnp.int32), 2)
+    assert int(out[0]) == 1
+    q = jnp.ones((1, 8, 2, 16), jnp.float32)
+    assert flash_attention(q, q[:, :, :2], q[:, :, :2]).shape == (1, 8, 2, 16)
+    t = jnp.ones((5, 4), jnp.float32)
+    assert embedding_bag(t, jnp.zeros((2, 3), jnp.int32)).shape == (2, 4)
