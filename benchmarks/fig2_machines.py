@@ -23,32 +23,34 @@ from repro.graph.datastructs import EdgeList, pad_edges
 V, E = 2000, 200_000
 
 
-def run(out):
-    src, dst = gen.random_graph(V, E, seed=0)
+def run(out, smoke: bool = False):
+    v, e = (200, 2_000) if smoke else (V, E)
+    machines = (1, 2, 4) if smoke else (1, 2, 4, 8, 16, 32, 64)
+    src, dst = gen.random_graph(v, e, seed=0)
     e_real = len(src)
     cert_fn = jax.jit(lambda el: sparse_certificate(el))
 
     # merge phase cost: certificate over a 2-certificate union (fixed shape)
-    cap2 = 2 * certificate_capacity(V)
-    el_merge = pad_edges(EdgeList.from_arrays(src[:cap2], dst[:cap2], V), cap2)
+    cap2 = 2 * certificate_capacity(v)
+    el_merge = pad_edges(EdgeList.from_arrays(src[:cap2], dst[:cap2], v), cap2)
     t_merge = timeit(cert_fn, el_merge)
 
-    full_cert = sparse_certificate(EdgeList.from_arrays(src, dst, V))
+    full_cert = sparse_certificate(EdgeList.from_arrays(src, dst, v))
     cs, cd = full_cert.to_numpy()
     import time as _t
     t0 = _t.perf_counter()
-    bridges_dfs(cs, cd, V)
+    bridges_dfs(cs, cd, v)
     t_final = _t.perf_counter() - t0
 
-    for m in (1, 2, 4, 8, 16, 32, 64):
+    for m in machines:
         shard = max(e_real // m, 1)
-        el = EdgeList.from_arrays(src[:shard], dst[:shard], V)
+        el = EdgeList.from_arrays(src[:shard], dst[:shard], v)
         t_phase1 = timeit(cert_fn, el)
         phases = int(np.ceil(np.log2(m))) if m > 1 else 0
         total = t_phase1 + phases * t_merge + t_final
         out.append(csv_row(
             f"fig2/M={m}", total,
             f"phase1={t_phase1*1e3:.1f}ms merge={phases}x{t_merge*1e3:.1f}ms "
-            f"final={t_final*1e3:.1f}ms V={V} E={e_real}",
+            f"final={t_final*1e3:.1f}ms V={v} E={e_real}",
         ))
     return out

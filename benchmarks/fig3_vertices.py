@@ -15,10 +15,12 @@ from repro.graph.datastructs import EdgeList
 E, M = 100_000, 10
 
 
-def run(out):
+def run(out, smoke: bool = False):
+    e = 2_000 if smoke else E
+    vs = (100, 200) if smoke else (500, 1000, 2000, 4000, 8000)
     cert_fn = jax.jit(lambda el: sparse_certificate(el))
-    for v in (500, 1000, 2000, 4000, 8000):
-        src, dst = gen.random_graph(v, E, seed=1)
+    for v in vs:
+        src, dst = gen.random_graph(v, e, seed=1)
         shard = max(len(src) // M, 1)
         el = EdgeList.from_arrays(src[:shard], dst[:shard], v)
         t_phase1 = timeit(cert_fn, el)

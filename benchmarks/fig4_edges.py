@@ -15,17 +15,19 @@ from repro.graph.datastructs import EdgeList
 V, M = 2000, 10
 
 
-def run(out):
+def run(out, smoke: bool = False):
+    v = 200 if smoke else V
+    es = (2_000, 4_000) if smoke else (50_000, 100_000, 200_000, 400_000, 800_000)
     cert_fn = jax.jit(lambda el: sparse_certificate(el))
-    for e in (50_000, 100_000, 200_000, 400_000, 800_000):
-        src, dst = gen.random_graph(V, e, seed=2)
+    for e in es:
+        src, dst = gen.random_graph(v, e, seed=2)
         shard = max(len(src) // M, 1)
-        el = EdgeList.from_arrays(src[:shard], dst[:shard], V)
+        el = EdgeList.from_arrays(src[:shard], dst[:shard], v)
         t_phase1 = timeit(cert_fn, el)
-        el_m = EdgeList.from_arrays(src[: 4 * (V - 1)], dst[: 4 * (V - 1)], V)
+        el_m = EdgeList.from_arrays(src[: 4 * (v - 1)], dst[: 4 * (v - 1)], v)
         t_merge = timeit(cert_fn, el_m)
         phases = int(np.ceil(np.log2(M)))
         total = t_phase1 + phases * t_merge
         out.append(csv_row(f"fig4/E={e}", total,
-                           f"phase1={t_phase1*1e3:.1f}ms V={V} M={M}"))
+                           f"phase1={t_phase1*1e3:.1f}ms V={v} M={M}"))
     return out

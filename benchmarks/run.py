@@ -3,35 +3,82 @@
 
     PYTHONPATH=src python -m benchmarks.run             # all paper figures
     PYTHONPATH=src python -m benchmarks.run --only fig2
+    PYTHONPATH=src python -m benchmarks.run --only fig5 --smoke
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_fig5.json --only fig5
+
+``--smoke`` shrinks problem sizes for CI-on-CPU sanity runs (numbers are not
+comparable across modes). ``--json PATH`` additionally writes the rows as
+``[{name, us_per_call, derived}, ...]`` records so PRs can check in
+``BENCH_*.json`` trajectory files.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+
+def rows_to_records(rows: list[str]) -> list[dict]:
+    """CSV rows (after the header) -> {name, us_per_call, derived} records."""
+    records = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        records.append(
+            {"name": name, "us_per_call": float(us), "derived": derived})
+    return records
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,fig5")
+                    help="comma list: fig2,fig3,fig4,fig5,fig6")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI sanity, not for comparison)")
+    ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
+                    help="also write records as JSON to PATH")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import fig2_machines, fig3_vertices, fig4_edges, fig5_baseline
+    from benchmarks import (
+        fig2_machines,
+        fig3_vertices,
+        fig4_edges,
+        fig5_baseline,
+        fig6_engine,
+    )
 
     benches = {
         "fig2": fig2_machines.run,
         "fig3": fig3_vertices.run,
         "fig4": fig4_edges.run,
         "fig5": fig5_baseline.run,
+        "fig6": fig6_engine.run,
     }
+    if which and not which <= set(benches):
+        ap.error(f"unknown figure(s) {sorted(which - set(benches))}; "
+                 f"choose from {sorted(benches)}")
+    if args.json_path:
+        try:  # fail on an unwritable path now, not after minutes of timing
+            existed = os.path.exists(args.json_path)
+            open(args.json_path, "a").close()
+            if not existed:  # don't leave a bogus empty BENCH_*.json behind
+                os.unlink(args.json_path)
+        except OSError as e:
+            ap.error(f"--json {args.json_path}: {e}")
     out: list[str] = ["name,us_per_call,derived"]
     for name, fn in benches.items():
         if which and name not in which:
             continue
         print(f"# running {name} ...", file=sys.stderr, flush=True)
-        fn(out)
+        fn(out, smoke=args.smoke)
     print("\n".join(out), flush=True)
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(rows_to_records(out[1:]), f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(out) - 1} records to {args.json_path}",
+              file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""BridgeEngine in three serving shapes: cached single queries, one-dispatch
+batches, and incremental edge-insert updates.
+
+    PYTHONPATH=src python examples/engine_queries.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.bridges_host import bridges_dfs
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+
+
+def main():
+    n, m = 256, 4_000
+    engine = BridgeEngine()
+
+    # --- compile-once: nearby graph sizes share one cached program --------
+    t0 = time.perf_counter()
+    src, dst, _ = gen.planted_bridge_graph(n, m, n_bridges=4, seed=0)
+    first = engine.find_bridges(src, dst, n)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    src2, dst2, _ = gen.planted_bridge_graph(n - 9, m - 300, n_bridges=2, seed=1)
+    engine.find_bridges(src2, dst2, n - 9)
+    t_warm = time.perf_counter() - t0
+    print(f"single: cold {t_cold * 1e3:.0f}ms (trace+compile) -> "
+          f"warm {t_warm * 1e3:.1f}ms on a different same-bucket graph")
+    print(f"        {engine.cache_info()} | {len(first)} bridges in query 0")
+
+    # --- batched: 8 independent graphs, ONE device dispatch ---------------
+    batch = [gen.planted_bridge_graph(n, m, n_bridges=2 + s % 3, seed=10 + s)[:2]
+             for s in range(8)]
+    t0 = time.perf_counter()
+    results = engine.find_bridges_batch(batch, n)
+    t_batch = time.perf_counter() - t0
+    for s, d in batch[:1]:  # spot-check one against the host oracle
+        assert results[0] == bridges_dfs(s, d, n)
+    print(f"batched: 8 graphs in {t_batch * 1e3:.0f}ms "
+          f"({[len(r) for r in results]} bridges per graph)")
+
+    # --- incremental: maintain the live certificate across edge inserts ---
+    engine.load(src, dst, n)
+    all_s, all_d = src, dst
+    t0 = time.perf_counter()
+    for step in range(4):
+        ds, dd = gen.random_graph(n, 32, seed=50 + step)
+        got = engine.insert_edges(ds, dd)
+        all_s = np.concatenate([all_s, ds])
+        all_d = np.concatenate([all_d, dd])
+    t_inc = (time.perf_counter() - t0) / 4
+    assert got == bridges_dfs(all_s, all_d, n)
+    print(f"incremental: {t_inc * 1e3:.1f}ms/update "
+          f"(live certificate: {engine.num_live_edges} edges, bound "
+          f"{2 * (n - 1)}); matches from-scratch recompute: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point (CPU): tier-1 tests + quickstart example + fig5 benchmark
+# smoke. Usable locally (no installs needed beyond jax/numpy/networkx) and
+# from .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== examples/quickstart.py =="
+python examples/quickstart.py
+
+echo "== benchmarks fig5 (smoke) =="
+python -m benchmarks.run --only fig5 --smoke --json BENCH_ci_fig5.json
+
+echo "CI OK"

@@ -1,6 +1,6 @@
 # The paper's primary contribution: parallel bridge finding in dense graphs
 # via distributed sparse certificates (Kumar & Singh, CS.DC 2021).
-from repro.core.api import find_bridges
+from repro.core.api import engine_for, find_bridges
 from repro.core.bridges_device import bridge_mask_device, bridges_device
 from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
 from repro.core.certificate import (
@@ -13,6 +13,7 @@ from repro.core.merge import build_distributed_bridges_fn, merged_certificate
 
 __all__ = [
     "find_bridges",
+    "engine_for",
     "bridges_device",
     "bridge_mask_device",
     "bridges_dfs",

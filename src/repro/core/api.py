@@ -5,21 +5,43 @@
     bridges = find_bridges(src, dst, n_nodes, mesh=mesh,
                            machine_axes=("data", "model"),
                            schedule="paper", final="host")          # distributed
+
+``find_bridges`` is a thin wrapper over a process-wide ``BridgeEngine``
+(repro.engine): calls are padded to power-of-two shape buckets and served by
+cached compiled programs, so repeated queries on nearby graph sizes pay zero
+retrace/recompile. Construct your own ``BridgeEngine`` for batched dispatch
+(``find_bridges_batch``) or incremental updates (``load``/``insert_edges``).
 """
 from __future__ import annotations
 
-import math
+# Distributed engines, one per (mesh, axes, schedule, merge) configuration.
+# Keyed by id(mesh): meshes are long-lived context objects in every caller.
+# Bounded: engines pin their mesh and compiled programs, so a process that
+# sweeps over transient meshes must not accumulate them without limit.
+_DIST_ENGINES: dict[tuple, object] = {}
+_DIST_ENGINES_MAX = 8
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.bridges_device import bridges_device
-from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
-from repro.core.certificate import sparse_certificate
-from repro.core.merge import build_distributed_bridges_fn
-from repro.core.partition import partition_edges
-from repro.graph.datastructs import EdgeList
+def engine_for(mesh=None, machine_axes=None, schedule: str = "paper",
+               merge: str = "recertify"):
+    """The shared engine serving this configuration (created on first use)."""
+    # Imported lazily: repro.engine builds on repro.core's pipeline stages,
+    # so a module-level import here would be circular.
+    from repro.engine.engine import BridgeEngine, get_default_engine
+
+    if mesh is None:
+        return get_default_engine()
+    if machine_axes is not None and not isinstance(machine_axes, str):
+        machine_axes = tuple(machine_axes)
+    key = (id(mesh), machine_axes, schedule, merge)
+    eng = _DIST_ENGINES.get(key)
+    if eng is None:
+        while len(_DIST_ENGINES) >= _DIST_ENGINES_MAX:  # evict oldest
+            _DIST_ENGINES.pop(next(iter(_DIST_ENGINES)))
+        eng = _DIST_ENGINES[key] = BridgeEngine(
+            mesh=mesh, machine_axes=machine_axes, schedule=schedule,
+            merge=merge)
+    return eng
 
 
 def find_bridges(
@@ -42,37 +64,5 @@ def find_bridges(
     Distributed mode: partition edges over the mesh "machines", per-machine
     certificates, merge phases, final stage — the paper's full pipeline.
     """
-    src = np.asarray(src, np.int32)
-    dst = np.asarray(dst, np.int32)
-
-    if mesh is None:
-        el = EdgeList.from_arrays(src, dst, n_nodes)
-        cert = sparse_certificate(el)
-        if final == "host":
-            return bridges_from_edgelist(cert)
-        out = bridges_device(cert)
-        s, d = out.to_numpy()
-        return set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
-
-    if machine_axes is None:
-        machine_axes = tuple(mesh.axis_names)
-    m = math.prod(mesh.shape[a] for a in (
-        (machine_axes,) if isinstance(machine_axes, str) else machine_axes
-    ))
-    psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m, seed=seed)
-    fn = build_distributed_bridges_fn(mesh, machine_axes, n_nodes, schedule,
-                                      final, merge)
-    with jax.set_mesh(mesh):
-        osrc, odst, omask = jax.jit(fn)(
-            jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask)
-        )
-    # machine 0 (paper) — or any machine under xor/hierarchical — holds the answer
-    osrc = np.asarray(osrc)[0]
-    odst = np.asarray(odst)[0]
-    omask = np.asarray(omask)[0]
-    if final == "host":
-        return bridges_dfs(osrc[omask], odst[omask], n_nodes)
-    return set(
-        (int(min(a, b)), int(max(a, b)))
-        for a, b in zip(osrc[omask], odst[omask])
-    )
+    eng = engine_for(mesh, machine_axes, schedule, merge)
+    return eng.find_bridges(src, dst, n_nodes, final=final, seed=seed)

@@ -1,0 +1,18 @@
+# Compile-once, shape-bucketed, batched + incrementally-updatable query
+# engine over the paper's bridges pipeline (see DESIGN.md §Engine).
+from repro.engine.batched import BatchedEdgeList, make_batched_pipeline
+from repro.engine.engine import (
+    BridgeEngine,
+    EngineStats,
+    find_bridges_batch,
+    get_default_engine,
+)
+
+__all__ = [
+    "BridgeEngine",
+    "EngineStats",
+    "BatchedEdgeList",
+    "make_batched_pipeline",
+    "find_bridges_batch",
+    "get_default_engine",
+]

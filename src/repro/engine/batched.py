@@ -1,0 +1,112 @@
+"""Batched graph containers + vmapped bridge pipelines.
+
+``BatchedEdgeList`` stacks B same-capacity edge buffers so B independent
+graphs resolve in ONE device dispatch: the whole certificate -> forest ->
+bridge pipeline is rank-polymorphic jnp code, so a single ``jax.vmap`` lifts
+it to the batch. All graphs in a batch share one (n_nodes, capacity) shape
+bucket — that is what makes the batched program compile once and serve any
+mix of nearby graph sizes (see DESIGN.md §Engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bridges_device import bridges_device
+from repro.core.certificate import sparse_certificate
+from repro.graph.datastructs import INT, EdgeList, pad_edges
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["src", "dst", "mask"],
+    meta_fields=["n_nodes"],
+)
+@dataclasses.dataclass(frozen=True)
+class BatchedEdgeList:
+    """B stacked padded edge lists with a shared static vertex count.
+
+    src, dst : int32[B, capacity]
+    mask     : bool[B, capacity]
+    n_nodes  : int   static vertex-count bucket shared by the whole batch
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    mask: jax.Array
+    n_nodes: int
+
+    @property
+    def batch_size(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[1]
+
+    def __getitem__(self, i: int) -> EdgeList:
+        return EdgeList(self.src[i], self.dst[i], self.mask[i], self.n_nodes)
+
+    @staticmethod
+    def from_graphs(graphs, n_nodes: int, capacity: int | None = None,
+                    batch_pad: int | None = None) -> "BatchedEdgeList":
+        """Stack ``[(src, dst), ...]`` into one batched buffer.
+
+        Each graph is padded to the shared ``capacity`` (default: the max raw
+        edge count). ``batch_pad`` optionally pads the batch dimension with
+        empty graphs so nearby batch sizes share one program too.
+        """
+        graphs = [(np.asarray(s, np.int32), np.asarray(d, np.int32))
+                  for s, d in graphs]
+        if capacity is None:
+            capacity = max(max((len(s) for s, _ in graphs), default=1), 1)
+        rows = []
+        for s, d in graphs:
+            if len(s) > capacity:
+                raise ValueError(
+                    f"graph with {len(s)} edges exceeds batch capacity {capacity}"
+                )
+            rows.append(pad_edges(EdgeList.from_arrays(s, d, n_nodes), capacity))
+        b = len(rows)
+        total = max(batch_pad if batch_pad is not None else b, b)
+        src = jnp.stack([r.src for r in rows]
+                        + [jnp.zeros((capacity,), INT)] * (total - b))
+        dst = jnp.stack([r.dst for r in rows]
+                        + [jnp.zeros((capacity,), INT)] * (total - b))
+        mask = jnp.stack([r.mask for r in rows]
+                         + [jnp.zeros((capacity,), bool)] * (total - b))
+        return BatchedEdgeList(src, dst, mask, n_nodes)
+
+
+def make_query_fn(n_nodes: int, final: str = "device", on_trace=None):
+    """The un-vmapped query core: ``(src, dst, mask) -> (s, d, m)`` buffers.
+
+    Outputs are the bridge buffer (final='device') or the sparse certificate
+    (final='host' — host Tarjan runs on it afterwards). This single function
+    is the pipeline body for BOTH the engine's single-graph programs and,
+    lifted by ``jax.vmap``, the batched ones.
+    """
+    out_cap = max(n_nodes - 1, 1)
+
+    def one(src, dst, mask):
+        if on_trace is not None:
+            on_trace()
+        cert = sparse_certificate(EdgeList(src, dst, mask, n_nodes))
+        if final == "device":
+            out = bridges_device(cert, out_capacity=out_cap)
+        elif final == "host":
+            out = cert
+        else:
+            raise ValueError(f"unknown final stage {final!r}")
+        return out.src, out.dst, out.mask
+
+    return one
+
+
+def make_batched_pipeline(n_nodes: int, final: str = "device", on_trace=None):
+    """jit(vmap(certificate -> bridges)) over the leading batch axis."""
+    return jax.jit(jax.vmap(make_query_fn(n_nodes, final, on_trace)))

@@ -1,0 +1,344 @@
+"""BridgeEngine: compile-once, shape-bucketed, batched + incrementally-
+updatable query engine for the bridges pipeline.
+
+The one-shot ``find_bridges`` function re-traces and re-compiles per exact
+array shape and discards all state between calls. The engine restructures
+that into the three properties a query-serving deployment needs:
+
+* **compile-once** — jitted executables are cached in the engine keyed by
+  ``(kind, n_nodes_bucket, capacity_bucket, backend, schedule)``. Inputs are
+  padded to power-of-two buckets (``graph.datastructs.bucket_capacity``), so
+  nearby graph sizes share one XLA program. ``stats`` counts cache hits,
+  misses, and actual retraces so serving code can assert no-retrace.
+
+* **batched** — ``find_bridges_batch`` packs B independent graphs into a
+  ``BatchedEdgeList`` and resolves them in one vmapped device dispatch.
+
+* **incremental** — ``load`` computes the live sparse certificate plus both
+  spanning-forest label vectors; ``insert_edges`` folds an edge delta in via
+  the warm-start ``merge_certificates_incremental`` primitive and re-runs
+  only the final bridge-extraction stage, instead of the full pipeline.
+
+Bucketing the vertex count is sound because every stage treats the extra
+vertices as isolated: they join no component, appear on no tour, and can
+never be a bridge endpoint. Bucketing the edge capacity is sound because all
+device code is mask-aware by construction (see DESIGN.md §Buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bridges_device import bridges_device
+from repro.core.bridges_host import bridges_dfs
+from repro.core.certificate import (
+    certificate_capacity,
+    merge_certificates_incremental,
+    sparse_certificate_ex,
+)
+from repro.engine.batched import (
+    BatchedEdgeList,
+    make_batched_pipeline,
+    make_query_fn,
+)
+from repro.graph.datastructs import EdgeList, bucket_capacity
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Program-cache counters.
+
+    ``hits``/``misses`` count engine program-cache lookups; ``traces`` counts
+    actual jax retraces (the counter increments inside the traced Python body,
+    so it only ticks when XLA really re-traces — the no-retrace assertion).
+    """
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.traces = 0
+
+
+def _pairs(src, dst, mask) -> set[tuple[int, int]]:
+    m = np.asarray(mask)
+    s = np.asarray(src)[m]
+    d = np.asarray(dst)[m]
+    return set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
+
+
+class BridgeEngine:
+    """Persistent bridge-query engine (single-device or distributed).
+
+    Single-device (``mesh=None``): certificate + final stage, compile-cached
+    per shape bucket, with batched and incremental entry points.
+
+    Distributed (``mesh=...``): the paper's full pipeline (partition,
+    per-machine certificates, merge schedule, final stage) with the built
+    shard_map program cached per (n_nodes, shard-capacity bucket).
+    """
+
+    def __init__(self, *, mesh=None, machine_axes=None, schedule: str = "paper",
+                 merge: str = "recertify", min_bucket: int = 16):
+        self.mesh = mesh
+        if mesh is not None and machine_axes is None:
+            machine_axes = tuple(mesh.axis_names)
+        if isinstance(machine_axes, str):
+            machine_axes = (machine_axes,)
+        self.machine_axes = tuple(machine_axes) if machine_axes else None
+        self.schedule = schedule
+        self.merge = merge
+        self.min_bucket = min_bucket
+        self.backend = jax.default_backend()
+        self.stats = EngineStats()
+        self._programs: dict[tuple, object] = {}
+        self._live: dict | None = None
+
+    # ------------------------------------------------------------------ cache
+    def _program(self, key: tuple, build):
+        """Compile-once: build on first use, count hits afterwards."""
+        fn = self._programs.get(key)
+        if fn is None:
+            self.stats.misses += 1
+            fn = self._programs[key] = build()
+        else:
+            self.stats.hits += 1
+        return fn
+
+    def cache_info(self) -> dict:
+        return {
+            "programs": len(self._programs),
+            "hits": self.stats.hits,
+            "misses": self.stats.misses,
+            "traces": self.stats.traces,
+        }
+
+    def _bucket(self, m: int) -> int:
+        return bucket_capacity(m, self.min_bucket)
+
+    def _tick_trace(self):
+        self.stats.traces += 1
+
+    # ---------------------------------------------------------- single device
+    def _build_single(self, n_bucket: int, final: str):
+        return jax.jit(make_query_fn(n_bucket, final, self._tick_trace))
+
+    def find_bridges(self, src, dst, n_nodes: int, *, final: str = "device",
+                     seed: int = 0) -> set[tuple[int, int]]:
+        """Bridges of one graph. Same contract as ``core.find_bridges``."""
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        if self.mesh is not None:
+            return self._find_bridges_distributed(src, dst, n_nodes,
+                                                  final=final, seed=seed)
+        n_bucket = self._bucket(n_nodes)
+        cap = self._bucket(max(len(src), 1))
+        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+        key = ("single", final, n_bucket, cap, self.backend, None)
+        fn = self._program(key, lambda: self._build_single(n_bucket, final))
+        s, d, m = fn(el.src, el.dst, el.mask)
+        if final == "host":
+            mm = np.asarray(m)
+            return bridges_dfs(np.asarray(s)[mm], np.asarray(d)[mm], n_nodes)
+        return _pairs(s, d, m)
+
+    # ----------------------------------------------------------------- batched
+    def find_bridges_batch(self, graphs, n_nodes, *, final: str = "device",
+                           ) -> list[set[tuple[int, int]]]:
+        """Resolve B independent graphs in ONE device dispatch.
+
+        ``graphs``: iterable of (src, dst) pairs. ``n_nodes``: shared vertex
+        count, or a per-graph sequence (bucketed to the max). Returns the
+        per-graph bridge sets in order.
+        """
+        graphs = [(np.asarray(s, np.int32), np.asarray(d, np.int32))
+                  for s, d in graphs]
+        if not graphs:
+            return []
+        ns = ([int(n_nodes)] * len(graphs)
+              if np.ndim(n_nodes) == 0 else [int(x) for x in n_nodes])
+        if len(ns) != len(graphs):
+            raise ValueError(
+                f"{len(graphs)} graphs but {len(ns)} vertex counts")
+        n_bucket = self._bucket(max(ns))
+        cap = self._bucket(max(max((len(s) for s, _ in graphs), default=1), 1))
+        b_bucket = bucket_capacity(len(graphs), 1)
+        bel = BatchedEdgeList.from_graphs(graphs, n_bucket, capacity=cap,
+                                          batch_pad=b_bucket)
+        key = ("batch", final, n_bucket, cap, b_bucket, self.backend, None)
+        fn = self._program(
+            key,
+            lambda: make_batched_pipeline(n_bucket, final=final,
+                                          on_trace=self._tick_trace),
+        )
+        s, d, m = fn(bel.src, bel.dst, bel.mask)
+        s, d, m = np.asarray(s), np.asarray(d), np.asarray(m)
+        out = []
+        for i, n in enumerate(ns):
+            if final == "host":
+                out.append(bridges_dfs(s[i][m[i]], d[i][m[i]], n))
+            else:
+                out.append(_pairs(s[i], d[i], m[i]))
+        return out
+
+    # ------------------------------------------------------------- incremental
+    def _build_load(self, n_bucket: int):
+        cert_cap = certificate_capacity(n_bucket)
+
+        def run(src, dst, mask):
+            self._tick_trace()
+            el = EdgeList(src, dst, mask, n_bucket)
+            cert, lab1, lab2, _ = sparse_certificate_ex(el, capacity=cert_cap)
+            return cert.src, cert.dst, cert.mask, lab1, lab2
+
+        return jax.jit(run)
+
+    def _build_insert(self, n_bucket: int):
+        def run(cs, cd, cm, lab1, lab2, rs, rd, rm):
+            self._tick_trace()
+            own = EdgeList(cs, cd, cm, n_bucket)
+            recv = EdgeList(rs, rd, rm, n_bucket)
+            cert, lab1, lab2, _ = merge_certificates_incremental(
+                own, lab1, lab2, recv)
+            return cert.src, cert.dst, cert.mask, lab1, lab2
+
+        return jax.jit(run)
+
+    def _build_final(self, n_bucket: int):
+        out_cap = max(n_bucket - 1, 1)
+
+        def run(cs, cd, cm):
+            self._tick_trace()
+            out = bridges_device(EdgeList(cs, cd, cm, n_bucket),
+                                 out_capacity=out_cap)
+            return out.src, out.dst, out.mask
+
+        return jax.jit(run)
+
+    def load(self, src, dst, n_nodes: int) -> "BridgeEngine":
+        """Set the engine's live graph: certificate + warm-start labels."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "incremental updates are single-device; use mesh=None")
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        n_bucket = self._bucket(n_nodes)
+        cap = self._bucket(max(len(src), 1))
+        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+        key = ("load", n_bucket, cap, self.backend, None)
+        fn = self._program(key, lambda: self._build_load(n_bucket))
+        cs, cd, cm, lab1, lab2 = fn(el.src, el.dst, el.mask)
+        self._live = {
+            "src": cs, "dst": cd, "mask": cm, "lab1": lab1, "lab2": lab2,
+            "n_nodes": int(n_nodes), "n_bucket": n_bucket,
+        }
+        return self
+
+    @property
+    def num_live_edges(self) -> int:
+        """Edge count of the live certificate (<= 2(n-1) by Lemma 1)."""
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        return int(np.asarray(self._live["mask"]).sum())
+
+    def insert_edges(self, src, dst, *, final: str = "device",
+                     ) -> set[tuple[int, int]]:
+        """Fold an edge delta into the live certificate, return new bridges.
+
+        The warm-start labels make the two delta forest passes scan only the
+        delta buffer with hooking starting from the existing partition; the
+        full certificate pipeline is NOT re-run — only the final bridge
+        extraction over the (bounded, fixed-shape) live certificate.
+        """
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        live = self._live
+        n_bucket = live["n_bucket"]
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        delta_cap = self._bucket(max(len(src), 1))
+        recv = EdgeList.from_arrays(src, dst, n_bucket, capacity=delta_cap)
+        key = ("insert", n_bucket, delta_cap, self.backend, None)
+        fn = self._program(key, lambda: self._build_insert(n_bucket))
+        cs, cd, cm, lab1, lab2 = fn(
+            live["src"], live["dst"], live["mask"], live["lab1"], live["lab2"],
+            recv.src, recv.dst, recv.mask,
+        )
+        live.update(src=cs, dst=cd, mask=cm, lab1=lab1, lab2=lab2)
+        return self.current_bridges(final=final)
+
+    def current_bridges(self, *, final: str = "device") -> set[tuple[int, int]]:
+        """Bridges of the live graph (final stage only; no certificate work)."""
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        live = self._live
+        if final == "host":
+            m = np.asarray(live["mask"])
+            return bridges_dfs(np.asarray(live["src"])[m],
+                               np.asarray(live["dst"])[m], live["n_nodes"])
+        key = ("final", live["n_bucket"], self.backend, None)
+        fn = self._program(key, lambda: self._build_final(live["n_bucket"]))
+        s, d, m = fn(live["src"], live["dst"], live["mask"])
+        return _pairs(s, d, m)
+
+    # ------------------------------------------------------------- distributed
+    def _machines(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.machine_axes)
+
+    def _build_distributed(self, n_nodes: int, final: str):
+        from repro.core.merge import build_distributed_bridges_fn
+
+        fn = build_distributed_bridges_fn(
+            self.mesh, self.machine_axes, n_nodes, self.schedule, final,
+            self.merge)
+        return jax.jit(fn)
+
+    def _find_bridges_distributed(self, src, dst, n_nodes: int, *,
+                                  final: str, seed: int):
+        from repro.core.partition import partition_edges
+
+        m = self._machines()
+        psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m, seed=seed)
+        shard_cap = self._bucket(psrc.shape[1])
+        pad = shard_cap - psrc.shape[1]
+        if pad:
+            psrc = np.pad(psrc, ((0, 0), (0, pad)))
+            pdst = np.pad(pdst, ((0, 0), (0, pad)))
+            pmask = np.pad(pmask, ((0, 0), (0, pad)))
+        key = ("dist", n_nodes, shard_cap, self.backend, self.schedule,
+               final, self.merge)
+        fn = self._program(
+            key, lambda: self._build_distributed(n_nodes, final))
+        with jax.set_mesh(self.mesh):
+            osrc, odst, omask = fn(
+                jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
+        # machine 0 (paper) — or any machine under xor/hierarchical — answers
+        osrc = np.asarray(osrc)[0]
+        odst = np.asarray(odst)[0]
+        omask = np.asarray(omask)[0]
+        if final == "host":
+            return bridges_dfs(osrc[omask], odst[omask], n_nodes)
+        return _pairs(osrc, odst, omask)
+
+
+_DEFAULT_ENGINE: BridgeEngine | None = None
+
+
+def get_default_engine() -> BridgeEngine:
+    """Process-wide single-device engine behind ``core.find_bridges``."""
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = BridgeEngine()
+    return _DEFAULT_ENGINE
+
+
+def find_bridges_batch(graphs, n_nodes, *, final: str = "device",
+                       engine: BridgeEngine | None = None):
+    """Module-level batched entry point over the default engine."""
+    eng = engine if engine is not None else get_default_engine()
+    return eng.find_bridges_batch(graphs, n_nodes, final=final)

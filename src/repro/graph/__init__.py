@@ -1,4 +1,10 @@
-from repro.graph.datastructs import EdgeList, compact_edges, pad_edges
+from repro.graph.datastructs import (
+    EdgeList,
+    bucket_capacity,
+    compact_edges,
+    pad_edges,
+)
 from repro.graph import generators
 
-__all__ = ["EdgeList", "compact_edges", "pad_edges", "generators"]
+__all__ = ["EdgeList", "bucket_capacity", "compact_edges", "pad_edges",
+           "generators"]

@@ -73,9 +73,31 @@ def pad_edges(edges: EdgeList, capacity: int) -> EdgeList:
             jnp.concatenate([edges.mask, jnp.zeros((pad,), bool)]),
             edges.n_nodes,
         )
-    # Shrink: compact first so valid edges are at the front.
-    c = compact_edges(edges, capacity)
-    return c
+    # Shrink: compact first so valid edges are at the front. The no-edge-loss
+    # promise is only checkable eagerly; under a trace the count is abstract
+    # (callers inside jit must bound their selection, as compact_edges documents).
+    try:
+        n_real = int(edges.num_edges())
+    except jax.errors.ConcretizationTypeError:
+        n_real = None
+    if n_real is not None and n_real > capacity:
+        raise ValueError(
+            f"pad_edges: shrinking to {capacity} slots would drop "
+            f"{n_real - capacity} of {n_real} real edges"
+        )
+    return compact_edges(edges, capacity)
+
+
+def bucket_capacity(m: int, minimum: int = 16) -> int:
+    """Smallest power of two >= max(m, minimum).
+
+    The shape-bucketing contract of the BridgeEngine (see repro.engine):
+    every host-facing buffer is padded to a power-of-two slot count so nearby
+    graph sizes share one traced/compiled XLA program instead of recompiling
+    per exact edge count.
+    """
+    m = max(int(m), minimum, 1)
+    return 1 << (m - 1).bit_length()
 
 
 def compact_edges(edges: EdgeList, capacity: int, keep: jax.Array | None = None) -> EdgeList:

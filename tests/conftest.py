@@ -1,16 +1,21 @@
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# Single-core CPU container + jit compiles inside properties: disable deadlines.
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=15,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-    derandomize=True,
-)
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # minimal env: property tests auto-skip via _hyp
+    settings = None
+
+if settings is not None:
+    # Single-core CPU container + jit compiles inside properties: disable deadlines.
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=15,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+        derandomize=True,
+    )
+    settings.load_profile("repro")
 
 
 @pytest.fixture

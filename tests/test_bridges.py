@@ -1,6 +1,6 @@
 """Bridge finding: host DFS + device PRAM extraction vs networkx oracle."""
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import find_bridges
 from repro.core.bridges_device import bridge_mask_device, bridges_device

@@ -1,6 +1,6 @@
 """Sparse-certificate properties (paper Lemma 1 + the certificate theorem)."""
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
 from repro.core.certificate import (

@@ -1,6 +1,6 @@
 """Euler-tour machinery invariants against a numpy recursive-DFS oracle."""
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.euler import build_sparse_table, euler_tour, range_reduce
 from repro.core.forest import spanning_forest

@@ -1,7 +1,7 @@
 """Spanning-forest properties: acyclic, component-spanning, label-correct."""
 import networkx as nx
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.forest import connected_components, spanning_forest
 from repro.graph import generators as gen

@@ -1,0 +1,151 @@
+"""Merge-schedule equivalence: ``paper``, ``xor``, and ``hierarchical`` must
+produce identical bridge sets.
+
+Certificate union is associative, commutative, and idempotent, so every
+schedule computes the same final certificate. The simulator below drives the
+REAL phase-permutation logic (``merge._phase_perm``) and the real merge step
+(``merge_certificates``) machine-by-machine on host — no collectives — so the
+equivalence property is testable in a single-device environment. The
+end-to-end shard_map version runs too when this jax build supports it.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
+from repro.core.certificate import (
+    certificate_capacity,
+    merge_certificates,
+    sparse_certificate,
+)
+from repro.core.merge import _phase_perm
+from repro.core.partition import partition_edges
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList, pad_edges
+
+from helpers import nx_bridges
+
+
+def _empty_cert(n):
+    """All-masked-off buffer: what ppermute non-receivers see (a no-op union)."""
+    cap = certificate_capacity(n)
+    import jax.numpy as jnp
+
+    return EdgeList(jnp.zeros(cap, jnp.int32), jnp.zeros(cap, jnp.int32),
+                    jnp.zeros(cap, bool), n)
+
+
+def _local_certs(src, dst, n, m, seed=0):
+    psrc, pdst, pmask = partition_edges(src, dst, n, m, seed=seed)
+    cap = certificate_capacity(n)
+    return [
+        sparse_certificate(
+            EdgeList(psrc[i], pdst[i], pmask[i], n), capacity=cap)
+        for i in range(m)
+    ]
+
+
+def _run_phases(certs, schedule, m):
+    """One flattened-axis schedule, mirroring merge._merge_phases_one_axis."""
+    phases = max(int(math.ceil(math.log2(m))), 0)
+    n = certs[0].n_nodes
+    for q in range(phases):
+        perm = _phase_perm(schedule, m, q)
+        recv = {d: certs[s] for (s, d) in perm}
+        certs = [
+            merge_certificates(certs[i], recv[i]) if i in recv
+            else merge_certificates(certs[i], _empty_cert(n))
+            for i in range(m)
+        ]
+    return certs
+
+
+def _simulate(schedule, src, dst, n, m=8, axes=(2, 4)):
+    """Host simulation of the distributed pipeline for one schedule."""
+    certs = _local_certs(src, dst, n, m)
+    if schedule in ("paper", "xor"):
+        return _run_phases(certs, schedule, m)
+    assert schedule == "hierarchical"
+    # machines laid out on an (axes[0], axes[1]) grid, fastest axis last:
+    # xor-merge within each row first, then xor-merge within each column.
+    a0, a1 = axes
+    assert a0 * a1 == m
+    grid = [certs[r * a1:(r + 1) * a1] for r in range(a0)]
+    grid = [_run_phases(row, "xor", a1) for row in grid]
+    for c in range(a1):
+        col = _run_phases([grid[r][c] for r in range(a0)], "xor", a0)
+        for r in range(a0):
+            grid[r][c] = col[r]
+    return [cert for row in grid for cert in row]
+
+
+CASES = [
+    ("planted", lambda: gen.planted_bridge_graph(96, 2000, 4, seed=5)[:2] + (96,)),
+    ("barbell", lambda: gen.barbell(10, 5)[:2] + (gen.barbell(10, 5)[3],)),
+]
+
+
+@pytest.mark.parametrize("name,make", CASES, ids=[c[0] for c in CASES])
+def test_three_schedules_identical_bridges(name, make):
+    src, dst, n = make()
+    want = nx_bridges(src, dst, n)
+    results = {}
+    for schedule in ("paper", "xor", "hierarchical"):
+        certs = _simulate(schedule, src, dst, n)
+        # paper: machine 0 answers; xor/hierarchical: every machine answers
+        answer_on = [0] if schedule == "paper" else range(len(certs))
+        got = {i: bridges_from_edgelist(certs[i]) for i in answer_on}
+        assert all(g == want for g in got.values()), (schedule, name)
+        results[schedule] = got[0]
+    assert results["paper"] == results["xor"] == results["hierarchical"]
+
+
+def _supports_shard_map() -> bool:
+    import jax
+
+    try:
+        from jax.sharding import AxisType  # noqa: F401
+    except ImportError:
+        return False
+    return hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")
+
+
+@pytest.mark.skipif(not _supports_shard_map(),
+                    reason="this jax build lacks shard_map/set_mesh/AxisType")
+def test_three_schedules_end_to_end_shard_map():
+    """Full collective pipeline (subprocess with 8 forced host devices)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import jax
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(AxisType.Auto,) * 2)
+            from repro.core import find_bridges
+            from repro.core.bridges_host import bridges_dfs
+            from repro.graph import generators as gen
+            for name, (src, dst, n) in {
+                "planted": gen.planted_bridge_graph(96, 2000, 4, seed=5)[:2] + (96,),
+                "barbell": gen.barbell(10, 5)[:2] + (gen.barbell(10, 5)[3],),
+            }.items():
+                want = bridges_dfs(src, dst, n)
+                got = {s: find_bridges(src, dst, n, mesh=mesh,
+                                       machine_axes=("data", "model"),
+                                       schedule=s, final="device", seed=1)
+                       for s in ("paper", "xor", "hierarchical")}
+                assert got["paper"] == got["xor"] == got["hierarchical"] == want, name
+            print("OK")
+        """)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout

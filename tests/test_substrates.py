@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import Prefetcher, SyntheticTokens, recsys_batches
