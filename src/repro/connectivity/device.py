@@ -1,0 +1,169 @@
+"""Device (PRAM) failure-point analyses on the shared tour state.
+
+All analyses run on fixed-capacity masked buffers and lower to one XLA
+program each (jit/vmap-compatible), built from ``common.tour_state``:
+
+* **bridges** — tree edge whose child subtree no non-tree edge escapes
+  (the test refactored out of ``core/bridges_device.py``).
+* **articulation points** — Tarjan–Vishkin block decomposition on an
+  *arbitrary* rooted spanning tree: an auxiliary graph on the tree edges
+  (identified by their child vertices) connects two tree edges iff they lie
+  on a common cycle; its connected components (reusing ``core/forest.py``
+  hooking) are the biconnected blocks, and a vertex is an articulation
+  point iff its incident tree edges span >= 2 distinct blocks.
+* **2ECC labels** — contract the bridges: connected components of the
+  edge buffer with bridge slots masked off, canonicalized to the smallest
+  member vertex id (so device and host references agree exactly).
+* **bridge tree** — each bridge, relabeled by the 2ECC canonical labels of
+  its endpoints, in a fixed (n-1)-slot buffer (a forest has < n edges).
+
+NOTE (DESIGN.md §Connectivity): bridges/2ECC/bridge-tree may run on the
+sparse 2-edge certificate; articulation points must run on the full edge
+set — arbitrary-forest F1 ∪ F2 certificates do not preserve vertex cuts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.connectivity.common import tour_state
+from repro.core.forest import connected_components
+from repro.graph.datastructs import INF32, INT, EdgeList, compact_edges
+
+
+# --------------------------------------------------------------- traced cores
+def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
+    """bool[n] articulation-point mask (Tarjan–Vishkin aux components).
+
+    Aux graph on child-vertex ids (tree edge (p(v), v) <-> aux vertex v):
+      rule 1: each non-tree edge (u, w) with u, w unrelated in the tree
+              joins aux u and aux w (the cycle through their parent edges);
+      rule 2: each tree edge (v, w), w child, v non-root, joins aux w and
+              aux v iff subtree(w) has a non-tree edge escaping subtree(v)
+              (low(w) < disc(v) or high(w) > vhi(v)).
+    Aux components label each tree edge with its biconnected block; v is an
+    articulation point iff >= 2 distinct block labels touch v.
+    """
+    disc, vhi = st["disc"], st["vhi"]
+    parent, child, tree_mask = st["parent"], st["child"], st["tree_mask"]
+
+    # rule 1 — unrelated endpoints (neither subtree interval contains the
+    # other's discovery position). Roots are ancestors of their whole
+    # component, so rule-1 endpoints are always non-root children.
+    anc_sd = (disc[src] <= disc[dst]) & (disc[dst] <= vhi[src])
+    anc_ds = (disc[dst] <= disc[src]) & (disc[src] <= vhi[dst])
+    rule1 = st["nt_mask"] & ~anc_sd & ~anc_ds
+
+    # rule 2 — child subtree escapes the parent's subtree
+    esc = (st["smin"] < disc[parent]) | (st["smax"] > vhi[parent])
+    rule2 = tree_mask & ~st["is_root"][parent] & esc
+
+    aux_src = jnp.where(rule1, src, jnp.where(rule2, child, 0))
+    aux_dst = jnp.where(rule1, dst, jnp.where(rule2, parent, 0))
+    aux_labels = connected_components(
+        EdgeList(aux_src, aux_dst, rule1 | rule2, n))
+
+    # block label per tree edge; a vertex with two distinct incident block
+    # labels sits in two biconnected blocks => articulation point
+    blk = aux_labels[child]
+    ends = jnp.concatenate([parent, child])
+    labs = jnp.concatenate([blk, blk])
+    tm2 = jnp.concatenate([tree_mask, tree_mask])
+    mn = jax.ops.segment_min(jnp.where(tm2, labs, INF32),
+                             jnp.where(tm2, ends, 0), num_segments=n)
+    mx = jax.ops.segment_max(jnp.where(tm2, labs, -1),
+                             jnp.where(tm2, ends, 0), num_segments=n)
+    return (mn < INF32) & (mx > mn)
+
+
+def two_ecc_from_state(src, dst, mask, n: int, bridge) -> jax.Array:
+    """int32[n] canonical 2ECC labels: components after bridge contraction.
+
+    Reuses the forest hooking + pointer doubling; labels are canonicalized
+    to the minimum member vertex id so any two correct implementations
+    produce identical arrays (isolated vertices label themselves).
+    """
+    labels = connected_components(
+        EdgeList(src, dst, mask & ~bridge, n))
+    vs = jnp.arange(n, dtype=INT)
+    minid = jax.ops.segment_min(vs, labels, num_segments=n)
+    return minid[labels]
+
+
+def bridge_tree_from_state(src, dst, mask, n: int, bridge, ecc,
+                           capacity: int) -> EdgeList:
+    """Bridge tree: 2ECC supernodes joined by the bridges, compacted into a
+    fixed ``capacity``-slot buffer (bridges form a forest => < n of them)."""
+    bt = EdgeList(ecc[src], ecc[dst], mask & bridge, n)
+    return compact_edges(bt, capacity)
+
+
+# ------------------------------------------------------------- jitted kernels
+@partial(jax.jit, static_argnames=("n",))
+def _bridge_mask_impl(src, dst, mask, n: int):
+    return tour_state(src, dst, mask, n)["bridge"]
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _articulation_impl(src, dst, mask, n: int):
+    st = tour_state(src, dst, mask, n)
+    return articulation_from_state(src, dst, mask, n, st)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _two_ecc_impl(src, dst, mask, n: int):
+    st = tour_state(src, dst, mask, n)
+    return two_ecc_from_state(src, dst, mask, n, st["bridge"])
+
+
+@partial(jax.jit, static_argnames=("n", "capacity"))
+def _bridge_tree_impl(src, dst, mask, n: int, capacity: int):
+    st = tour_state(src, dst, mask, n)
+    ecc = two_ecc_from_state(src, dst, mask, n, st["bridge"])
+    out = bridge_tree_from_state(src, dst, mask, n, st["bridge"], ecc,
+                                 capacity)
+    return out.src, out.dst, out.mask
+
+
+# ---------------------------------------------------------------- public API
+def bridge_mask(edges: EdgeList) -> jax.Array:
+    """bool[E] bridge indicator over the input buffer slots."""
+    return _bridge_mask_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+
+
+def bridges(edges: EdgeList, out_capacity: int | None = None) -> EdgeList:
+    """Bridges of the (certificate) graph, compacted into an (n-1)-slot buffer."""
+    bm = bridge_mask(edges)
+    cap = out_capacity if out_capacity is not None else max(edges.n_nodes - 1, 1)
+    return compact_edges(edges, cap, keep=bm)
+
+
+def articulation_mask(edges: EdgeList) -> jax.Array:
+    """bool[n] articulation-point (cut vertex) indicator.
+
+    Run this on the FULL edge buffer: the sparse 2-edge certificate does not
+    preserve vertex cuts (DESIGN.md §Connectivity).
+    """
+    return _articulation_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+
+
+def articulation_points(edges: EdgeList) -> set[int]:
+    """Host-facing articulation point set."""
+    m = np.asarray(articulation_mask(edges))
+    return set(int(v) for v in np.nonzero(m)[0])
+
+
+def two_ecc_labels(edges: EdgeList) -> jax.Array:
+    """int32[n] canonical 2ECC label per vertex (min member id)."""
+    return _two_ecc_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+
+
+def bridge_tree(edges: EdgeList, out_capacity: int | None = None) -> EdgeList:
+    """Bridge tree as an EdgeList over canonical 2ECC supernode labels."""
+    cap = out_capacity if out_capacity is not None else max(edges.n_nodes - 1, 1)
+    s, d, m = _bridge_tree_impl(edges.src, edges.dst, edges.mask,
+                                edges.n_nodes, cap)
+    return EdgeList(s, d, m, edges.n_nodes)

@@ -3,82 +3,31 @@ certificate. Fully jit-able, so the *entire* distributed algorithm — partition
 per-machine certificates, merge phases, and the final bridge extraction —
 lowers into one XLA program for the multi-pod dry-run.
 
-Method (see euler.py for the tour machinery):
-  1. F1 = spanning forest of the certificate (tree), rest = non-tree edges.
-  2. Euler tour of F1 -> per-vertex discovery positions; each tree edge's
-     child-subtree is a contiguous position interval [lo, hi].
-  3. ntmin/ntmax[v] = min/max discovery position reachable from v via a
-     non-tree edge (or disc[v] itself).
-  4. Tree edge is a bridge iff the subtree's range-min stays >= lo and
-     range-max stays <= hi (no non-tree edge escapes the subtree).
+The tour/interval machinery that used to live here is now the common layer
+of the connectivity subsystem (``repro/connectivity/common.py``), where it
+also serves articulation points, 2ECC labels, and the bridge tree. This
+module keeps the historical entry points as thin wrappers.
+
+Imports are deferred to call time: ``connectivity`` builds on
+``core.forest``/``core.euler``, so a module-level import here would create
+an import cycle between the two packages.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.euler import build_sparse_table, euler_tour, range_reduce
-from repro.core.forest import spanning_forest
-from repro.graph.datastructs import INF32, INT, EdgeList, compact_edges
-
-
-@partial(jax.jit, static_argnames=("n",))
-def _bridges_impl(src, dst, mask, n: int):
-    edges = EdgeList(src, dst, mask, n)
-    tree_mask, labels = spanning_forest(edges)
-    nt_mask = mask & ~tree_mask & (src != dst)
-
-    tour = euler_tour(
-        jnp.where(tree_mask, src, 0),
-        jnp.where(tree_mask, dst, 0),
-        tree_mask,
-        labels,
-        n,
-    )
-    gpos, disc = tour["gpos"], tour["disc"]
-    C = src.shape[0]
-
-    # non-tree reach per vertex (include own discovery position)
-    ep_v = jnp.concatenate([jnp.where(nt_mask, src, 0), jnp.where(nt_mask, dst, 0)])
-    ep_w = jnp.concatenate([jnp.where(nt_mask, dst, 0), jnp.where(nt_mask, src, 0)])
-    nt2 = jnp.concatenate([nt_mask, nt_mask])
-    reach = jnp.where(nt2, disc[ep_w], INF32)
-    ntmin = jax.ops.segment_min(reach, jnp.where(nt2, ep_v, 0), num_segments=n)
-    ntmin = jnp.minimum(ntmin, disc)
-    reach_max = jnp.where(nt2, disc[ep_w], -1)
-    ntmax = jax.ops.segment_max(reach_max, jnp.where(nt2, ep_v, 0), num_segments=n)
-    ntmax = jnp.maximum(ntmax, jnp.where(disc == INF32, -1, disc))
-
-    # scatter per-vertex values into tour-position space.
-    # disc values run up to `total` (<= 2C), so allocate 2C+1 positions.
-    P = gpos.shape[0] + 1
-    pos_of_v = jnp.where(disc == INF32, P, disc)  # drop isolated
-    Rmin = jnp.full((P,), INF32, INT).at[pos_of_v].set(ntmin, mode="drop")
-    Rmax = jnp.full((P,), -1, INT).at[pos_of_v].set(ntmax, mode="drop")
-    Tmin = build_sparse_table(Rmin, jnp.minimum, INF32)
-    Tmax = build_sparse_table(Rmax, jnp.maximum, -1)
-
-    # per tree-edge subtree interval: down-arc at lo, up-arc at hi
-    # => subtree(child) = { w : lo < disc[w] <= hi }
-    down = jnp.minimum(gpos[0::2], gpos[1::2])
-    up = jnp.maximum(gpos[0::2], gpos[1::2])
-    lo = jnp.where(tree_mask, down, 0)
-    hi = jnp.where(tree_mask, up, 1)
-    smin = range_reduce(Tmin, lo + 1, hi, jnp.minimum)
-    smax = range_reduce(Tmax, lo + 1, hi, jnp.maximum)
-    bridge = tree_mask & (smin > lo) & (smax <= hi)
-    return bridge
+from repro.graph.datastructs import EdgeList
 
 
 def bridges_device(edges: EdgeList, out_capacity: int | None = None) -> EdgeList:
     """Bridges of the (certificate) graph, compacted into an (n-1)-slot buffer."""
-    bridge_mask = _bridges_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
-    cap = out_capacity if out_capacity is not None else max(edges.n_nodes - 1, 1)
-    return compact_edges(edges, cap, keep=bridge_mask)
+    from repro.connectivity.device import bridges
+
+    return bridges(edges, out_capacity)
 
 
 def bridge_mask_device(edges: EdgeList) -> jax.Array:
     """bool[E] bridge indicator over the input buffer slots."""
-    return _bridges_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+    from repro.connectivity.device import bridge_mask
+
+    return bridge_mask(edges)

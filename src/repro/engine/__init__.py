@@ -1,18 +1,30 @@
 # Compile-once, shape-bucketed, batched + incrementally-updatable query
-# engine over the paper's bridges pipeline (see DESIGN.md §Engine).
-from repro.engine.batched import BatchedEdgeList, make_batched_pipeline
+# engine over the paper's bridges pipeline and the connectivity analyses
+# (see DESIGN.md §Engine / §Connectivity).
+from repro.engine.batched import (
+    ANALYSIS_KINDS,
+    BatchedEdgeList,
+    make_analysis_fn,
+    make_batched_pipeline,
+    normalize_kind,
+)
 from repro.engine.engine import (
     BridgeEngine,
     EngineStats,
+    analyze_batch,
     find_bridges_batch,
     get_default_engine,
 )
 
 __all__ = [
+    "ANALYSIS_KINDS",
     "BridgeEngine",
     "EngineStats",
     "BatchedEdgeList",
+    "make_analysis_fn",
     "make_batched_pipeline",
+    "normalize_kind",
+    "analyze_batch",
     "find_bridges_batch",
     "get_default_engine",
 ]

@@ -1,11 +1,12 @@
-"""Batched graph containers + vmapped bridge pipelines.
+"""Batched graph containers + vmapped analysis pipelines.
 
 ``BatchedEdgeList`` stacks B same-capacity edge buffers so B independent
-graphs resolve in ONE device dispatch: the whole certificate -> forest ->
-bridge pipeline is rank-polymorphic jnp code, so a single ``jax.vmap`` lifts
+graphs resolve in ONE device dispatch: every analysis pipeline (certificate
+-> forest -> bridges, and the connectivity kinds — cuts / 2ecc /
+bridge_tree) is rank-polymorphic jnp code, so a single ``jax.vmap`` lifts
 it to the batch. All graphs in a batch share one (n_nodes, capacity) shape
 bucket — that is what makes the batched program compile once and serve any
-mix of nearby graph sizes (see DESIGN.md §Engine).
+mix of nearby graph sizes (see DESIGN.md §Engine, §Connectivity).
 """
 from __future__ import annotations
 
@@ -16,9 +17,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bridges_device import bridges_device
+from repro.connectivity.common import tour_state
+from repro.connectivity.device import (
+    articulation_from_state,
+    bridge_tree_from_state,
+    two_ecc_from_state,
+)
 from repro.core.certificate import sparse_certificate
-from repro.graph.datastructs import INT, EdgeList, pad_edges
+from repro.graph.datastructs import INT, EdgeList, compact_edges, pad_edges
+
+#: query kinds every engine entry point accepts ("bridge-tree" is accepted
+#: as an alias for "bridge_tree").
+ANALYSIS_KINDS = ("bridges", "cuts", "2ecc", "bridge_tree")
+
+
+def normalize_kind(kind: str) -> str:
+    k = str(kind).replace("-", "_").lower()
+    if k == "two_ecc":
+        k = "2ecc"
+    if k not in ANALYSIS_KINDS:
+        raise ValueError(
+            f"unknown analysis kind {kind!r}; choose from {ANALYSIS_KINDS}")
+    return k
 
 
 @partial(
@@ -82,31 +102,60 @@ class BatchedEdgeList:
         return BatchedEdgeList(src, dst, mask, n_nodes)
 
 
-def make_query_fn(n_nodes: int, final: str = "device", on_trace=None):
-    """The un-vmapped query core: ``(src, dst, mask) -> (s, d, m)`` buffers.
+def make_analysis_fn(n_nodes: int, kind: str = "bridges",
+                     final: str = "device", on_trace=None):
+    """The un-vmapped query core for one analysis kind.
 
-    Outputs are the bridge buffer (final='device') or the sparse certificate
-    (final='host' — host Tarjan runs on it afterwards). This single function
-    is the pipeline body for BOTH the engine's single-graph programs and,
-    lifted by ``jax.vmap``, the batched ones.
+    ``(src, dst, mask) ->``
+      bridges     : (s, d, m) bridge buffer, or the sparse certificate when
+                    final='host' (host Tarjan runs on it afterwards)
+      cuts        : bool[n] articulation-point mask — computed on the FULL
+                    edge buffer, because the 2-edge certificate does not
+                    preserve vertex cuts (DESIGN.md §Connectivity)
+      2ecc        : int32[n] canonical 2ECC labels (on the certificate)
+      bridge_tree : (s, d, m) buffer of 2ECC supernode pairs (certificate)
+
+    This single function is the pipeline body for BOTH the engine's
+    single-graph programs and, lifted by ``jax.vmap``, the batched ones.
     """
+    kind = normalize_kind(kind)
+    if final not in ("device", "host"):
+        raise ValueError(f"unknown final stage {final!r}")
+    if final == "host" and kind != "bridges":
+        raise ValueError(f"final='host' only applies to kind='bridges', "
+                         f"not {kind!r}")
     out_cap = max(n_nodes - 1, 1)
 
     def one(src, dst, mask):
         if on_trace is not None:
             on_trace()
+        if kind == "cuts":
+            st = tour_state(src, dst, mask, n_nodes)
+            return articulation_from_state(src, dst, mask, n_nodes, st)
         cert = sparse_certificate(EdgeList(src, dst, mask, n_nodes))
-        if final == "device":
-            out = bridges_device(cert, out_capacity=out_cap)
-        elif final == "host":
-            out = cert
-        else:
-            raise ValueError(f"unknown final stage {final!r}")
+        if final == "host":  # kind == "bridges"
+            return cert.src, cert.dst, cert.mask
+        st = tour_state(cert.src, cert.dst, cert.mask, n_nodes)
+        if kind == "bridges":
+            out = compact_edges(cert, out_cap, keep=st["bridge"])
+            return out.src, out.dst, out.mask
+        ecc = two_ecc_from_state(cert.src, cert.dst, cert.mask, n_nodes,
+                                 st["bridge"])
+        if kind == "2ecc":
+            return ecc
+        out = bridge_tree_from_state(cert.src, cert.dst, cert.mask, n_nodes,
+                                     st["bridge"], ecc, out_cap)
         return out.src, out.dst, out.mask
 
     return one
 
 
-def make_batched_pipeline(n_nodes: int, final: str = "device", on_trace=None):
-    """jit(vmap(certificate -> bridges)) over the leading batch axis."""
-    return jax.jit(jax.vmap(make_query_fn(n_nodes, final, on_trace)))
+def make_query_fn(n_nodes: int, final: str = "device", on_trace=None):
+    """Backward-compatible alias: the kind='bridges' analysis core."""
+    return make_analysis_fn(n_nodes, "bridges", final, on_trace)
+
+
+def make_batched_pipeline(n_nodes: int, final: str = "device", on_trace=None,
+                          kind: str = "bridges"):
+    """jit(vmap(one-graph analysis)) over the leading batch axis."""
+    return jax.jit(jax.vmap(make_analysis_fn(n_nodes, kind, final, on_trace)))

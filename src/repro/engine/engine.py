@@ -11,8 +11,14 @@ that into the three properties a query-serving deployment needs:
   nearby graph sizes share one XLA program. ``stats`` counts cache hits,
   misses, and actual retraces so serving code can assert no-retrace.
 
-* **batched** — ``find_bridges_batch`` packs B independent graphs into a
-  ``BatchedEdgeList`` and resolves them in one vmapped device dispatch.
+* **batched** — ``find_bridges_batch`` / ``analyze_batch`` pack B
+  independent graphs into a ``BatchedEdgeList`` and resolve them in one
+  vmapped device dispatch.
+
+* **multi-kind** — ``analyze(..., kind=...)`` serves the whole failure-point
+  family (bridges, articulation points, 2ECC labels, bridge tree) through
+  the same program cache; see ``repro.connectivity`` for the analyses and
+  DESIGN.md §Connectivity for which kinds may run on the certificate.
 
 * **incremental** — ``load`` computes the live sparse certificate plus both
   spanning-forest label vectors; ``insert_edges`` folds an edge delta in via
@@ -33,7 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bridges_device import bridges_device
+from repro.connectivity.common import tour_state
+from repro.connectivity.device import (
+    bridge_tree_from_state,
+    two_ecc_from_state,
+)
 from repro.core.bridges_host import bridges_dfs
 from repro.core.certificate import (
     certificate_capacity,
@@ -42,10 +52,11 @@ from repro.core.certificate import (
 )
 from repro.engine.batched import (
     BatchedEdgeList,
+    make_analysis_fn,
     make_batched_pipeline,
-    make_query_fn,
+    normalize_kind,
 )
-from repro.graph.datastructs import EdgeList, bucket_capacity
+from repro.graph.datastructs import EdgeList, bucket_capacity, compact_edges
 
 
 @dataclasses.dataclass
@@ -125,8 +136,52 @@ class BridgeEngine:
         self.stats.traces += 1
 
     # ---------------------------------------------------------- single device
-    def _build_single(self, n_bucket: int, final: str):
-        return jax.jit(make_query_fn(n_bucket, final, self._tick_trace))
+    def _build_single(self, n_bucket: int, kind: str, final: str):
+        return jax.jit(make_analysis_fn(n_bucket, kind, final,
+                                        self._tick_trace))
+
+    @staticmethod
+    def _to_result(kind: str, out, n_nodes: int):
+        """Device buffers -> host-facing result for one analysis kind."""
+        if kind == "cuts":
+            m = np.asarray(out)[:n_nodes]
+            return set(int(v) for v in np.nonzero(m)[0])
+        if kind == "2ecc":
+            # padding vertices are isolated singletons, so trimming is exact
+            return np.asarray(out)[:n_nodes].copy()
+        s, d, m = out
+        return _pairs(s, d, m)
+
+    def analyze(self, src, dst, n_nodes: int, *, kind: str = "bridges",
+                final: str = "device", seed: int = 0):
+        """One graph, one analysis kind; compile-once per shape bucket.
+
+        kind='bridges'     -> set[(u, v)] bridge pairs
+        kind='cuts'        -> set[int] articulation points
+        kind='2ecc'        -> int array[n_nodes] canonical 2ECC labels
+        kind='bridge_tree' -> set[(a, b)] 2ECC supernode pairs
+        """
+        kind = normalize_kind(kind)
+        if kind == "bridges":
+            return self.find_bridges(src, dst, n_nodes, final=final,
+                                     seed=seed)
+        if final != "device":
+            raise ValueError(f"final={final!r} only applies to "
+                             f"kind='bridges', not {kind!r}")
+        if self.mesh is not None:
+            raise NotImplementedError(
+                f"kind={kind!r} is single-device for now: the distributed "
+                "merge schedules exchange 2-edge certificates (see DESIGN.md "
+                "§Connectivity and ROADMAP open items)")
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        n_bucket = self._bucket(n_nodes)
+        cap = self._bucket(max(len(src), 1))
+        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+        key = ("single", kind, "device", n_bucket, cap, self.backend, None)
+        fn = self._program(
+            key, lambda: self._build_single(n_bucket, kind, "device"))
+        return self._to_result(kind, fn(el.src, el.dst, el.mask), n_nodes)
 
     def find_bridges(self, src, dst, n_nodes: int, *, final: str = "device",
                      seed: int = 0) -> set[tuple[int, int]]:
@@ -139,23 +194,40 @@ class BridgeEngine:
         n_bucket = self._bucket(n_nodes)
         cap = self._bucket(max(len(src), 1))
         el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        key = ("single", final, n_bucket, cap, self.backend, None)
-        fn = self._program(key, lambda: self._build_single(n_bucket, final))
+        key = ("single", "bridges", final, n_bucket, cap, self.backend, None)
+        fn = self._program(
+            key, lambda: self._build_single(n_bucket, "bridges", final))
         s, d, m = fn(el.src, el.dst, el.mask)
         if final == "host":
             mm = np.asarray(m)
             return bridges_dfs(np.asarray(s)[mm], np.asarray(d)[mm], n_nodes)
         return _pairs(s, d, m)
 
+    def find_cuts(self, src, dst, n_nodes: int) -> set[int]:
+        """Articulation points (cut vertices) of one graph."""
+        return self.analyze(src, dst, n_nodes, kind="cuts")
+
+    def find_two_ecc(self, src, dst, n_nodes: int) -> np.ndarray:
+        """Canonical 2-edge-connected-component label per vertex."""
+        return self.analyze(src, dst, n_nodes, kind="2ecc")
+
+    def find_bridge_tree(self, src, dst, n_nodes: int) -> set[tuple[int, int]]:
+        """Bridge tree edges as pairs of canonical 2ECC labels."""
+        return self.analyze(src, dst, n_nodes, kind="bridge_tree")
+
     # ----------------------------------------------------------------- batched
-    def find_bridges_batch(self, graphs, n_nodes, *, final: str = "device",
-                           ) -> list[set[tuple[int, int]]]:
+    def analyze_batch(self, graphs, n_nodes, *, kind: str = "bridges",
+                      final: str = "device") -> list:
         """Resolve B independent graphs in ONE device dispatch.
 
         ``graphs``: iterable of (src, dst) pairs. ``n_nodes``: shared vertex
         count, or a per-graph sequence (bucketed to the max). Returns the
-        per-graph bridge sets in order.
+        per-graph results in order, typed per ``analyze``'s kind table.
         """
+        kind = normalize_kind(kind)
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "batched dispatch is single-device; use mesh=None")
         graphs = [(np.asarray(s, np.int32), np.asarray(d, np.int32))
                   for s, d in graphs]
         if not graphs:
@@ -170,21 +242,46 @@ class BridgeEngine:
         b_bucket = bucket_capacity(len(graphs), 1)
         bel = BatchedEdgeList.from_graphs(graphs, n_bucket, capacity=cap,
                                           batch_pad=b_bucket)
-        key = ("batch", final, n_bucket, cap, b_bucket, self.backend, None)
+        key = ("batch", kind, final, n_bucket, cap, b_bucket, self.backend,
+               None)
         fn = self._program(
             key,
             lambda: make_batched_pipeline(n_bucket, final=final,
-                                          on_trace=self._tick_trace),
+                                          on_trace=self._tick_trace,
+                                          kind=kind),
         )
-        s, d, m = fn(bel.src, bel.dst, bel.mask)
-        s, d, m = np.asarray(s), np.asarray(d), np.asarray(m)
+        out_dev = fn(bel.src, bel.dst, bel.mask)
+        if kind in ("cuts", "2ecc"):
+            rows = np.asarray(out_dev)
+            return [self._to_result(kind, rows[i], n)
+                    for i, n in enumerate(ns)]
+        s, d, m = (np.asarray(x) for x in out_dev)
         out = []
         for i, n in enumerate(ns):
-            if final == "host":
+            if final == "host":  # kind == "bridges"
                 out.append(bridges_dfs(s[i][m[i]], d[i][m[i]], n))
             else:
                 out.append(_pairs(s[i], d[i], m[i]))
         return out
+
+    def find_bridges_batch(self, graphs, n_nodes, *, final: str = "device",
+                           ) -> list[set[tuple[int, int]]]:
+        """Batched bridges: B graphs, one vmapped dispatch."""
+        return self.analyze_batch(graphs, n_nodes, kind="bridges",
+                                  final=final)
+
+    def find_cuts_batch(self, graphs, n_nodes) -> list[set[int]]:
+        """Batched articulation points: B graphs, one vmapped dispatch."""
+        return self.analyze_batch(graphs, n_nodes, kind="cuts")
+
+    def find_two_ecc_batch(self, graphs, n_nodes) -> list[np.ndarray]:
+        """Batched canonical 2ECC labels: B graphs, one vmapped dispatch."""
+        return self.analyze_batch(graphs, n_nodes, kind="2ecc")
+
+    def find_bridge_tree_batch(self, graphs, n_nodes,
+                               ) -> list[set[tuple[int, int]]]:
+        """Batched bridge trees: B graphs, one vmapped dispatch."""
+        return self.analyze_batch(graphs, n_nodes, kind="bridge_tree")
 
     # ------------------------------------------------------------- incremental
     def _build_load(self, n_bucket: int):
@@ -209,13 +306,22 @@ class BridgeEngine:
 
         return jax.jit(run)
 
-    def _build_final(self, n_bucket: int):
+    def _build_final(self, n_bucket: int, kind: str):
+        """Final analysis stage over the live certificate (no re-certify)."""
         out_cap = max(n_bucket - 1, 1)
 
         def run(cs, cd, cm):
             self._tick_trace()
-            out = bridges_device(EdgeList(cs, cd, cm, n_bucket),
-                                 out_capacity=out_cap)
+            st = tour_state(cs, cd, cm, n_bucket)
+            if kind == "bridges":
+                out = compact_edges(EdgeList(cs, cd, cm, n_bucket), out_cap,
+                                    keep=st["bridge"])
+                return out.src, out.dst, out.mask
+            ecc = two_ecc_from_state(cs, cd, cm, n_bucket, st["bridge"])
+            if kind == "2ecc":
+                return ecc
+            out = bridge_tree_from_state(cs, cd, cm, n_bucket, st["bridge"],
+                                         ecc, out_cap)
             return out.src, out.dst, out.mask
 
         return jax.jit(run)
@@ -247,14 +353,21 @@ class BridgeEngine:
         return int(np.asarray(self._live["mask"]).sum())
 
     def insert_edges(self, src, dst, *, final: str = "device",
-                     ) -> set[tuple[int, int]]:
-        """Fold an edge delta into the live certificate, return new bridges.
+                     kind: str = "bridges"):
+        """Fold an edge delta into the live certificate, return the updated
+        analysis (any 2-edge-connectivity kind; see ``current_analysis``).
 
         The warm-start labels make the two delta forest passes scan only the
         delta buffer with hooking starting from the existing partition; the
-        full certificate pipeline is NOT re-run — only the final bridge
-        extraction over the (bounded, fixed-shape) live certificate.
+        full certificate pipeline is NOT re-run — only the final analysis
+        stage over the (bounded, fixed-shape) live certificate.
         """
+        kind = normalize_kind(kind)
+        if kind == "cuts":  # refuse BEFORE mutating the live state
+            raise NotImplementedError(
+                "the live state is a 2-edge certificate, which does not "
+                "preserve articulation points; run analyze(..., kind='cuts') "
+                "on the full edge set instead (DESIGN.md §Connectivity)")
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
@@ -270,21 +383,40 @@ class BridgeEngine:
             recv.src, recv.dst, recv.mask,
         )
         live.update(src=cs, dst=cd, mask=cm, lab1=lab1, lab2=lab2)
-        return self.current_bridges(final=final)
+        return self.current_analysis(kind=kind, final=final)
 
-    def current_bridges(self, *, final: str = "device") -> set[tuple[int, int]]:
-        """Bridges of the live graph (final stage only; no certificate work)."""
+    def current_analysis(self, kind: str = "bridges", *,
+                         final: str = "device"):
+        """Analysis of the live graph (final stage only; no certificate work).
+
+        Serves every 2-edge-connectivity kind — bridges, 2ecc, bridge_tree —
+        straight off the live certificate. kind='cuts' is refused: the
+        F1 ∪ F2 certificate provably does NOT preserve articulation points
+        (DESIGN.md §Connectivity), so vertex cuts must be recomputed on the
+        full edge set via ``analyze(..., kind='cuts')``.
+        """
+        kind = normalize_kind(kind)
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
+        if kind == "cuts":
+            raise NotImplementedError(
+                "the live state is a 2-edge certificate, which does not "
+                "preserve articulation points; run analyze(..., kind='cuts') "
+                "on the full edge set instead (DESIGN.md §Connectivity)")
         live = self._live
-        if final == "host":
+        if final == "host" and kind == "bridges":
             m = np.asarray(live["mask"])
             return bridges_dfs(np.asarray(live["src"])[m],
                                np.asarray(live["dst"])[m], live["n_nodes"])
-        key = ("final", live["n_bucket"], self.backend, None)
-        fn = self._program(key, lambda: self._build_final(live["n_bucket"]))
-        s, d, m = fn(live["src"], live["dst"], live["mask"])
-        return _pairs(s, d, m)
+        key = ("final", kind, live["n_bucket"], self.backend, None)
+        fn = self._program(
+            key, lambda: self._build_final(live["n_bucket"], kind))
+        out = fn(live["src"], live["dst"], live["mask"])
+        return self._to_result(kind, out, live["n_nodes"])
+
+    def current_bridges(self, *, final: str = "device") -> set[tuple[int, int]]:
+        """Bridges of the live graph (final stage only)."""
+        return self.current_analysis("bridges", final=final)
 
     # ------------------------------------------------------------- distributed
     def _machines(self) -> int:
@@ -342,3 +474,10 @@ def find_bridges_batch(graphs, n_nodes, *, final: str = "device",
     """Module-level batched entry point over the default engine."""
     eng = engine if engine is not None else get_default_engine()
     return eng.find_bridges_batch(graphs, n_nodes, final=final)
+
+
+def analyze_batch(graphs, n_nodes, *, kind: str = "bridges",
+                  engine: BridgeEngine | None = None):
+    """Module-level batched analysis (any kind) over the default engine."""
+    eng = engine if engine is not None else get_default_engine()
+    return eng.analyze_batch(graphs, n_nodes, kind=kind)

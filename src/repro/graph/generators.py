@@ -91,6 +91,95 @@ def barbell(n_side: int, path_len: int):
     return np.array(src, np.int32), np.array(dst, np.int32), bridges, n
 
 
+def _clique(start: int, size: int):
+    """All size*(size-1)/2 edges of a clique on [start, start+size)."""
+    i, j = np.triu_indices(size, k=1)
+    return (start + i).astype(np.int32), (start + j).astype(np.int32)
+
+
+def barbell_scenario(n_side: int, path_len: int) -> dict:
+    """Barbell with full failure-point ground truth.
+
+    Two ``n_side``-cliques joined by a ``path_len``-vertex path: every path
+    edge is a bridge, every path vertex and both attach vertices are
+    articulation points, and each path vertex is its own 2ECC.
+    """
+    assert n_side >= 3, "n_side < 3 makes clique edges bridges too"
+    src, dst, bridges, n = barbell(n_side, path_len)
+    cuts = set(range(n_side - 1, n_side + path_len + 1))
+    return {
+        "name": f"barbell({n_side},{path_len})",
+        "src": src, "dst": dst, "n": n,
+        "bridges": bridges, "cuts": cuts, "n_2ecc": path_len + 2,
+    }
+
+
+def chain_of_cliques(k: int, clique_size: int) -> dict:
+    """k cliques in a chain, consecutive ones joined by a single bridge
+    (last vertex of clique i -> first vertex of clique i+1).
+
+    Ground truth: k-1 bridges, 2(k-1) articulation points (every bridge
+    endpoint), k 2ECCs (one per clique).
+    """
+    assert k >= 2 and clique_size >= 3
+    srcs, dsts, bridges, cuts = [], [], set(), set()
+    for b in range(k):
+        s, d = _clique(b * clique_size, clique_size)
+        srcs.append(s)
+        dsts.append(d)
+        if b + 1 < k:
+            u, v = (b + 1) * clique_size - 1, (b + 1) * clique_size
+            srcs.append(np.array([u], np.int32))
+            dsts.append(np.array([v], np.int32))
+            bridges.add((u, v))
+            cuts.update((u, v))
+    return {
+        "name": f"chain({k}x{clique_size})",
+        "src": np.concatenate(srcs), "dst": np.concatenate(dsts),
+        "n": k * clique_size,
+        "bridges": bridges, "cuts": cuts, "n_2ecc": k,
+    }
+
+
+def star_of_cliques(k: int, clique_size: int) -> dict:
+    """A hub vertex joined by one bridge to each of k cliques.
+
+    Ground truth: k bridges, articulation points = hub (for k >= 2) plus
+    each clique's attach vertex, k+1 2ECCs (the hub is its own).
+    """
+    assert k >= 1 and clique_size >= 3
+    srcs, dsts, bridges, cuts = [], [], set(), set()
+    for b in range(k):
+        start = 1 + b * clique_size
+        s, d = _clique(start, clique_size)
+        srcs.append(np.concatenate([s, np.array([0], np.int32)]))
+        dsts.append(np.concatenate([d, np.array([start], np.int32)]))
+        bridges.add((0, start))
+        cuts.add(start)
+    if k >= 2:
+        cuts.add(0)
+    return {
+        "name": f"star({k}x{clique_size})",
+        "src": np.concatenate(srcs), "dst": np.concatenate(dsts),
+        "n": 1 + k * clique_size,
+        "bridges": bridges, "cuts": cuts, "n_2ecc": k + 1,
+    }
+
+
+def failure_scenarios(scale: int = 1) -> list[dict]:
+    """The planted failure-point benchmark/test suite at a given scale.
+
+    Every scenario dict carries ``src/dst/n`` plus exact ground truth:
+    ``bridges`` (pair set), ``cuts`` (vertex set), ``n_2ecc`` (class count).
+    """
+    s = max(int(scale), 1)
+    return [
+        barbell_scenario(4 * s, 3 * s),
+        chain_of_cliques(3 * s, 4),
+        star_of_cliques(2 * s, 4),
+    ]
+
+
 def tree_graph(n: int, seed: int = 0):
     """Random tree: every edge is a bridge."""
     rng = np.random.default_rng(seed)

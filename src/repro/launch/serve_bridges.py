@@ -1,25 +1,49 @@
-"""Batched bridge-query serving driver over the BridgeEngine.
+"""Batched connectivity-query serving driver over the BridgeEngine.
 
-Simulates heavy query traffic: a stream of independent bridge queries with
-jittered graph sizes (all landing in one shape bucket) is grouped into
-batches of B and resolved one device dispatch per batch by the compile-once
-engine. Reports queries/sec for cold (first batch pays the trace+compile),
-steady-state batched, single-query, and incremental-update serving modes.
+Simulates heavy query traffic: a stream of independent queries with jittered
+graph sizes (all landing in one shape bucket) is grouped into batches of B
+and resolved one device dispatch per batch by the compile-once engine.
+``--analysis`` picks the query kind(s) — bridges, cuts (articulation
+points), 2ecc, bridge-tree, or ``all`` — and the driver reports per-kind
+queries/sec for cold (first batch pays the trace+compile), steady-state
+batched, and single-query serving, plus incremental updates for the
+2-edge-connectivity kinds. ``--json`` writes the per-kind rates and the
+engine's cache hit/miss/trace counters for dashboards.
 
     PYTHONPATH=src python -m repro.launch.serve_bridges --smoke
     PYTHONPATH=src python -m repro.launch.serve_bridges \
-        --batch 8 --queries 64 --n 512 --edges 8192
+        --analysis all --batch 8 --queries 64 --n 512 --edges 8192 \
+        --json SERVE.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
+from repro.connectivity.host import (
+    articulation_points_dfs,
+    bridge_tree_dfs,
+    two_ecc_labels_dfs,
+)
 from repro.core.bridges_host import bridges_dfs
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
+
+KINDS = ("bridges", "cuts", "2ecc", "bridge-tree")
+
+_HOST_REF = {
+    "bridges": bridges_dfs,
+    "cuts": articulation_points_dfs,
+    "2ecc": two_ecc_labels_dfs,
+    "bridge-tree": bridge_tree_dfs,
+}
+
+#: kinds servable incrementally off the live 2-edge certificate
+#: (cuts are not: the certificate does not preserve vertex cuts)
+_INCREMENTAL_KINDS = ("bridges", "2ecc", "bridge-tree")
 
 
 def make_queries(num: int, n: int, edges: int, seed: int = 0):
@@ -36,8 +60,87 @@ def make_queries(num: int, n: int, edges: int, seed: int = 0):
     return qs
 
 
+def _same(kind: str, got, want) -> bool:
+    if kind == "2ecc":
+        return bool(np.array_equal(np.asarray(got), np.asarray(want)))
+    return got == want
+
+
+def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
+    """Batched + single-query serving for one analysis kind."""
+    stats: dict = {"kind": kind}
+
+    # ---- batched serving -------------------------------------------------
+    t_cold = None
+    t0 = time.perf_counter()
+    served = 0
+    for start in range(0, len(queries), args.batch):
+        chunk = queries[start:start + args.batch]
+        got = engine.analyze_batch(
+            [(s, d) for s, d, _ in chunk], [nq for _, _, nq in chunk],
+            kind=kind)
+        if args.verify:
+            s, d, nq = chunk[0]
+            want = _HOST_REF[kind](s, d, nq)
+            assert _same(kind, got[0], want), f"{kind} batch@{start} mismatch"
+        served += len(chunk)
+        if t_cold is None:
+            t_cold = time.perf_counter() - t0
+    t_total = time.perf_counter() - t0
+    t_warm = t_total - t_cold
+    warm_q = served - min(args.batch, served)
+    steady_qps = warm_q / max(t_warm, 1e-9) if warm_q > 0 else None
+    steady = (f"{steady_qps:.1f} queries/s" if steady_qps is not None
+              else "n/a (all queries fit in the first batch)")
+    print(f"[{kind:11s}] batched  : {served} queries, batch={args.batch} | "
+          f"cold first batch {t_cold * 1e3:.0f}ms | steady {steady}",
+          flush=True)
+    stats["batched"] = {"queries": served, "batch": args.batch,
+                        "cold_first_batch_s": t_cold,
+                        "steady_qps": steady_qps}
+
+    # ---- single-query serving (same engine: programs already cached) -----
+    t0 = time.perf_counter()
+    for s, d, nq in queries:
+        engine.analyze(s, d, nq, kind=kind)
+    dt = time.perf_counter() - t0
+    single_qps = len(queries) / max(dt, 1e-9)
+    print(f"[{kind:11s}] single   : {len(queries)} queries | "
+          f"{single_qps:.1f} queries/s", flush=True)
+    stats["single"] = {"queries": len(queries), "qps": single_qps}
+
+    # ---- incremental serving ---------------------------------------------
+    if args.deltas > 0 and kind in _INCREMENTAL_KINDS:
+        s0, d0, nq0 = queries[0]
+        engine.load(s0, d0, nq0)
+        all_s, all_d = s0, d0
+        t0 = time.perf_counter()
+        for k in range(args.deltas):
+            ds, dd = gen.random_graph(nq0, args.delta_edges,
+                                      seed=args.seed + 500 + k)
+            got = engine.insert_edges(ds, dd, kind=kind)
+            all_s = np.concatenate([all_s, ds])
+            all_d = np.concatenate([all_d, dd])
+        dt = time.perf_counter() - t0
+        if args.verify:
+            want = _HOST_REF[kind](all_s, all_d, nq0)
+            assert _same(kind, got, want), f"{kind} incremental mismatch"
+        ups = args.deltas / max(dt, 1e-9)
+        print(f"[{kind:11s}] increment: {args.deltas} deltas x "
+              f"{args.delta_edges} edges | {ups:.1f} updates/s | "
+              f"live cert edges {engine.num_live_edges}", flush=True)
+        stats["incremental"] = {"deltas": args.deltas,
+                                "delta_edges": args.delta_edges,
+                                "updates_per_s": ups,
+                                "live_cert_edges": engine.num_live_edges}
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--analysis", action="append",
+                    choices=list(KINDS) + ["all"], default=None,
+                    help="query kind(s) to serve; repeatable (default: bridges)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--n", type=int, default=512)
@@ -49,9 +152,14 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--verify", action="store_true",
                     help="check one query per batch against the host oracle")
+    ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
+                    help="write per-kind rates + engine cache counters")
     args = ap.parse_args(argv)
     if args.batch < 1 or args.queries < 1:
         ap.error("--batch and --queries must be >= 1")
+    kinds = args.analysis or ["bridges"]
+    if "all" in kinds:
+        kinds = list(KINDS)
     if args.smoke:
         args.queries = min(args.queries, 16)
         args.n = min(args.n, 128)
@@ -60,61 +168,20 @@ def main(argv=None):
 
     engine = BridgeEngine()
     queries = make_queries(args.queries, args.n, args.edges, seed=args.seed)
-
-    # ---- batched serving -------------------------------------------------
-    t_cold = None
-    t0 = time.perf_counter()
-    served = 0
-    for start in range(0, len(queries), args.batch):
-        chunk = queries[start:start + args.batch]
-        got = engine.find_bridges_batch(
-            [(s, d) for s, d, _ in chunk], [nq for _, _, nq in chunk])
-        if args.verify:
-            s, d, nq = chunk[0]
-            assert got[0] == bridges_dfs(s, d, nq), f"batch@{start} mismatch"
-        served += len(chunk)
-        if t_cold is None:
-            t_cold = time.perf_counter() - t0
-    t_total = time.perf_counter() - t0
-    t_warm = t_total - t_cold
-    warm_q = served - min(args.batch, served)
-    steady = (f"{warm_q / max(t_warm, 1e-9):.1f} queries/s" if warm_q > 0
-              else "n/a (all queries fit in the first batch)")
-    print(f"batched  : {served} queries, batch={args.batch} | "
-          f"cold first batch {t_cold * 1e3:.0f}ms | steady {steady}",
-          flush=True)
-
-    # ---- single-query serving (same engine: programs already cached) -----
-    t0 = time.perf_counter()
-    for s, d, nq in queries:
-        engine.find_bridges(s, d, nq)
-    dt = time.perf_counter() - t0
-    print(f"single   : {len(queries)} queries | "
-          f"{len(queries) / max(dt, 1e-9):.1f} queries/s", flush=True)
-
-    # ---- incremental serving ---------------------------------------------
-    if args.deltas > 0:
-        s0, d0, nq0 = queries[0]
-        engine.load(s0, d0, nq0)
-        all_s, all_d = s0, d0
-        t0 = time.perf_counter()
-        for k in range(args.deltas):
-            ds, dd = gen.random_graph(nq0, args.delta_edges,
-                                      seed=args.seed + 500 + k)
-            got = engine.insert_edges(ds, dd)
-            all_s = np.concatenate([all_s, ds])
-            all_d = np.concatenate([all_d, dd])
-        dt = time.perf_counter() - t0
-        if args.verify:
-            assert got == bridges_dfs(all_s, all_d, nq0), "incremental mismatch"
-        print(f"increment: {args.deltas} deltas x {args.delta_edges} edges | "
-              f"{args.deltas / max(dt, 1e-9):.1f} updates/s | "
-              f"live cert edges {engine.num_live_edges}", flush=True)
+    per_kind = [serve_kind(engine, kind, queries, args) for kind in kinds]
 
     info = engine.cache_info()
     print(f"engine   : {info['programs']} programs, {info['hits']} hits, "
           f"{info['misses']} misses, {info['traces']} traces", flush=True)
-    return info
+    report = {"kinds": per_kind, "engine": info,
+              "config": {"batch": args.batch, "queries": args.queries,
+                         "n": args.n, "edges": args.edges}}
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"# wrote serving report to {args.json_path}", flush=True)
+    return report
 
 
 if __name__ == "__main__":

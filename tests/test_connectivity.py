@@ -1,0 +1,253 @@
+"""Connectivity subsystem (DESIGN.md §Connectivity): device articulation
+points / 2ECC labels / bridge tree vs the host Tarjan references and
+networkx, planted failure scenarios, and the engine query kinds
+(compile-once no-retrace, batched dispatch, incremental updates)."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from _hyp import given, st
+from helpers import bucketed_graph, to_graph, to_pair_set
+from repro.connectivity import (
+    articulation_points,
+    articulation_points_dfs,
+    bridge_tree,
+    bridge_tree_dfs,
+    two_ecc_labels,
+    two_ecc_labels_dfs,
+)
+from repro.connectivity.host import bridges_dfs
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+
+# One (n, E) operating point so the whole module shares a few compiled
+# programs on the 1-core box: n in (32, 64] -> bucket 64, E -> bucket 512.
+N_A, N_B, E_N = 50, 60, 400
+
+# Shared engine: per-kind programs compile once for the whole module; tests
+# assert on counter DELTAS, never absolute values.
+ENGINE = BridgeEngine()
+
+DEVICE_KINDS = ("cuts", "2ecc", "bridge_tree")
+
+
+def graph(seed, n=N_A, e=E_N):
+    return gen.random_graph(n, e, seed=seed)
+
+
+def host_ref(kind, src, dst, n):
+    if kind == "cuts":
+        return articulation_points_dfs(src, dst, n)
+    if kind == "2ecc":
+        return two_ecc_labels_dfs(src, dst, n)
+    return bridge_tree_dfs(src, dst, n)
+
+
+def assert_same(kind, got, want):
+    if kind == "2ecc":
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    else:
+        assert got == want
+
+
+def nx_cuts(src, dst, n):
+    return set(nx.articulation_points(to_graph(src, dst, n)))
+
+
+# ------------------------------------------------------------ host reference
+def test_host_cuts_match_networkx():
+    for seed in range(6):
+        src, dst, n, _ = bucketed_graph(seed)
+        assert articulation_points_dfs(src, dst, n) == nx_cuts(src, dst, n)
+
+
+def test_host_two_ecc_is_bridge_contraction():
+    src, dst = graph(0)
+    labels = two_ecc_labels_dfs(src, dst, N_A)
+    G = to_graph(src, dst, N_A)
+    G.remove_edges_from(list(nx.bridges(G)))
+    for comp in nx.connected_components(G):
+        assert len({int(labels[v]) for v in comp}) == 1
+        assert int(min(comp)) == int(labels[min(comp)])
+
+
+# ------------------------------------------------------- device vs host refs
+def test_device_matches_host_on_random_graphs():
+    for seed in range(4):
+        src, dst, n, el = bucketed_graph(seed)
+        assert articulation_points(el) == articulation_points_dfs(src, dst, n)
+        assert np.array_equal(np.asarray(two_ecc_labels(el))[:n],
+                              two_ecc_labels_dfs(src, dst, n))
+        s, d = bridge_tree(el).to_numpy()
+        got = set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
+        assert got == bridge_tree_dfs(src, dst, n)
+
+
+def test_device_handles_multigraphs_and_self_loops():
+    for seed in range(3):
+        src, dst, n, el = bucketed_graph(seed, simple=False)
+        assert articulation_points(el) == articulation_points_dfs(src, dst, n)
+        assert np.array_equal(np.asarray(two_ecc_labels(el))[:n],
+                              two_ecc_labels_dfs(src, dst, n))
+
+
+def test_path_graph_everything_fails():
+    n = 16
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    el = EdgeList.from_arrays(src, dst, n)
+    assert articulation_points(el) == set(range(1, n - 1))
+    labels = np.asarray(two_ecc_labels(el))[:n]
+    assert np.array_equal(labels, np.arange(n))  # every vertex its own 2ECC
+    assert len(to_pair_set(bridge_tree(el))) == n - 1
+
+
+def test_cycle_graph_nothing_fails():
+    n = 16
+    src = np.arange(n, dtype=np.int32)
+    dst = ((np.arange(n) + 1) % n).astype(np.int32)
+    el = EdgeList.from_arrays(src, dst, n)
+    assert articulation_points(el) == set()
+    assert len(np.unique(np.asarray(two_ecc_labels(el))[:n])) == 1
+    assert to_pair_set(bridge_tree(el)) == set()
+
+
+def test_shared_vertex_cut_without_any_bridge():
+    # two triangles sharing vertex 0: a cut vertex no bridge analysis sees
+    src = np.array([0, 1, 2, 0, 3, 4], np.int32)
+    dst = np.array([1, 2, 0, 3, 4, 0], np.int32)
+    el = EdgeList.from_arrays(src, dst, 5)
+    assert bridges_dfs(src, dst, 5) == set()
+    assert articulation_points(el) == {0}
+    assert len(np.unique(np.asarray(two_ecc_labels(el))[:5])) == 1
+
+
+def test_certificate_counterexample_graph_has_no_cuts():
+    """The graph proving F1 ∪ F2 certificates don't preserve vertex cuts
+    (DESIGN.md §Connectivity): triangles {1,2,3}, {4,5,6}, hub 0 joined to
+    all six, cross edges i<->i+3. The full graph is 2-vertex-connected, yet
+    an adversarial forest pair drops every cross edge and leaves the hub a
+    cut vertex of the certificate. Cuts must therefore be computed on the
+    full buffer — which is what the device path does."""
+    tri_a = [(1, 2), (2, 3), (1, 3)]
+    tri_b = [(4, 5), (5, 6), (4, 6)]
+    hub = [(0, v) for v in range(1, 7)]
+    cross = [(1, 4), (2, 5), (3, 6)]
+    src = np.array([u for u, _ in tri_a + tri_b + hub + cross], np.int32)
+    dst = np.array([v for _, v in tri_a + tri_b + hub + cross], np.int32)
+    el = EdgeList.from_arrays(src, dst, 7)
+    assert nx_cuts(src, dst, 7) == set()
+    assert articulation_points(el) == set()
+    assert articulation_points_dfs(src, dst, 7) == set()
+
+
+# --------------------------------------------------------- planted scenarios
+@pytest.mark.parametrize("sc", gen.failure_scenarios(),
+                         ids=lambda sc: sc["name"])
+def test_planted_scenarios_match_ground_truth(sc):
+    src, dst, n = sc["src"], sc["dst"], sc["n"]
+    el = EdgeList.from_arrays(src, dst, n)
+    assert to_pair_set(el) >= sc["bridges"]  # planted bridges really exist
+    assert bridges_dfs(src, dst, n) == sc["bridges"]
+    assert articulation_points_dfs(src, dst, n) == sc["cuts"]
+    assert articulation_points(el) == sc["cuts"]
+    labels = np.asarray(two_ecc_labels(el))[:n]
+    assert len(np.unique(labels)) == sc["n_2ecc"]
+    # bridge tree has one edge per bridge, over 2ECC supernodes
+    assert len(to_pair_set(bridge_tree(el))) == len(sc["bridges"])
+
+
+# ------------------------------------------------------- hypothesis property
+@given(st.integers(0, 10_000))
+def test_prop_device_cuts_and_two_ecc_match_host(seed):
+    src, dst, n, el = bucketed_graph(seed, simple=(seed % 3 != 0))
+    assert articulation_points(el) == articulation_points_dfs(src, dst, n)
+    assert np.array_equal(np.asarray(two_ecc_labels(el))[:n],
+                          two_ecc_labels_dfs(src, dst, n))
+
+
+@given(st.integers(0, 10_000))
+def test_prop_bridge_tree_matches_host(seed):
+    src, dst, n, el = bucketed_graph(seed)
+    s, d = bridge_tree(el).to_numpy()
+    got = set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
+    assert got == bridge_tree_dfs(src, dst, n)
+
+
+# ------------------------------------------------------------- engine kinds
+def test_engine_kinds_no_retrace_on_cache_hit():
+    """Acceptance: each kind compiles once per bucket, zero retrace after."""
+    s1, d1 = graph(1)
+    s2, d2 = graph(2, N_B)  # different n, same (64, 512) bucket
+    for kind in DEVICE_KINDS:
+        r1 = ENGINE.analyze(s1, d1, N_A, kind=kind)
+        traces = ENGINE.stats.traces
+        r2 = ENGINE.analyze(s2, d2, N_B, kind=kind)
+        assert ENGINE.stats.traces == traces, f"{kind} retraced on cache hit"
+        assert_same(kind, r1, host_ref(kind, s1, d1, N_A))
+        assert_same(kind, r2, host_ref(kind, s2, d2, N_B))
+
+
+def test_engine_batch_matches_host_per_kind():
+    graphs = [graph(seed) for seed in range(4)]
+    for kind in DEVICE_KINDS:
+        got = ENGINE.analyze_batch(graphs, N_A, kind=kind)
+        for (s, d), g in zip(graphs, got):
+            assert_same(kind, g, host_ref(kind, s, d, N_A))
+        # smaller batch in the same B-bucket (3 -> 4) reuses the program
+        traces = ENGINE.stats.traces
+        got2 = ENGINE.analyze_batch(graphs[:3], N_A, kind=kind)
+        assert ENGINE.stats.traces == traces
+        for g2, g in zip(got2, got[:3]):
+            assert_same(kind, g2, g)
+
+
+def test_engine_batch_mixed_vertex_counts():
+    graphs = [graph(3), graph(4, N_B)]
+    got = ENGINE.find_cuts_batch(graphs, [N_A, N_B])
+    assert got[0] == articulation_points_dfs(*graphs[0], N_A)
+    assert got[1] == articulation_points_dfs(*graphs[1], N_B)
+    labels = ENGINE.find_two_ecc_batch(graphs, [N_A, N_B])
+    assert labels[0].shape == (N_A,) and labels[1].shape == (N_B,)
+
+
+def test_engine_convenience_methods_match_analyze():
+    src, dst = graph(5)
+    assert ENGINE.find_cuts(src, dst, N_A) == \
+        ENGINE.analyze(src, dst, N_A, kind="cuts")
+    assert np.array_equal(ENGINE.find_two_ecc(src, dst, N_A),
+                          ENGINE.analyze(src, dst, N_A, kind="2ecc"))
+    assert ENGINE.find_bridge_tree(src, dst, N_A) == \
+        ENGINE.analyze(src, dst, N_A, kind="bridge-tree")  # alias accepted
+
+
+def test_engine_incremental_serves_two_ecc_and_bridge_tree():
+    """Acceptance: insert_edges answers every certificate-safe kind."""
+    src, dst, _ = gen.planted_bridge_graph(N_A, E_N, n_bridges=3, seed=7)
+    ENGINE.load(src, dst, N_A)
+    all_s, all_d = src, dst
+    for step in range(2):
+        ds, dd = gen.random_graph(N_A, 30, seed=100 + step)
+        got = ENGINE.insert_edges(ds, dd, kind="2ecc")
+        all_s = np.concatenate([all_s, ds])
+        all_d = np.concatenate([all_d, dd])
+        assert np.array_equal(got, two_ecc_labels_dfs(all_s, all_d, N_A)), step
+    assert ENGINE.current_analysis("bridge_tree") == \
+        bridge_tree_dfs(all_s, all_d, N_A)
+    assert ENGINE.current_analysis("bridges") == \
+        bridges_dfs(all_s, all_d, N_A)
+
+
+def test_engine_incremental_cuts_refused():
+    src, dst = graph(8)
+    ENGINE.load(src, dst, N_A)
+    with pytest.raises(NotImplementedError, match="certificate"):
+        ENGINE.current_analysis("cuts")
+    with pytest.raises(NotImplementedError, match="certificate"):
+        ENGINE.insert_edges([0], [1], kind="cuts")
+
+
+def test_engine_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown analysis kind"):
+        ENGINE.analyze([0], [1], 4, kind="flux-capacitor")
