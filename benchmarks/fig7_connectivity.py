@@ -1,9 +1,9 @@
 """Fig 7 (beyond-paper): connectivity-subsystem serving throughput.
 
 For each failure-point query kind served by the BridgeEngine — cuts
-(articulation points), 2ecc (component labels), bridge_tree — three
-operating points on the same jittered planted-bridge query distribution
-as fig6:
+(articulation points), 2ecc (component labels), bridge_tree, bcc
+(biconnected blocks) — three operating points on the same jittered
+planted-bridge query distribution as fig6:
 
   * cold  — a fresh shape bucket's first query: trace + XLA compile + run.
   * cached — second-and-later queries: zero retrace (asserted).
@@ -25,7 +25,7 @@ from repro.connectivity.host import articulation_points_dfs
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
 
-KINDS = ("cuts", "2ecc", "bridge_tree")
+KINDS = ("cuts", "2ecc", "bridge_tree", "bcc")
 
 
 def run(out, smoke: bool = False):

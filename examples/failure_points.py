@@ -1,6 +1,8 @@
 """Failure-point analysis of a network through the BridgeEngine: one
 certificate-backed engine answers bridges, articulation points (cut
-vertices), 2ECC membership, and the bridge tree for the same graph.
+vertices), 2ECC membership, the bridge tree, and the biconnected blocks
+for the same graph — every kind in the analysis registry, on every
+substrate (single, batched, incremental).
 
     PYTHONPATH=src python examples/failure_points.py
 """
@@ -21,6 +23,7 @@ def main():
     cuts = engine.find_cuts(src, dst, n)
     labels = engine.find_two_ecc(src, dst, n)
     btree = engine.find_bridge_tree(src, dst, n)
+    blocks = engine.find_bcc(src, dst, n)
 
     print(f"network  : {sc['name']}  ({n} nodes, {len(src)} links)")
     print(f"bridges  : {sorted(bridges)}  (expected {sorted(sc['bridges'])})")
@@ -28,8 +31,12 @@ def main():
     print(f"2ECC     : {len(np.unique(labels))} isolation domains "
           f"(expected {sc['n_2ecc']})")
     print(f"bridgetree {sorted(btree)}  — lose any edge, split the network")
+    print(f"bcc      : {len(blocks)} biconnected blocks "
+          f"{sorted(sorted(b) for b in blocks)}")
     assert bridges == sc["bridges"] and cuts == sc["cuts"]
     assert len(np.unique(labels)) == sc["n_2ecc"]
+    # each bridge is its own 2-vertex block; each clique is one block
+    assert len(blocks) == len(sc["bridges"]) + 3
 
     # batched: every scenario in the fleet resolved in one device dispatch
     fleet = gen.failure_scenarios()
@@ -41,9 +48,11 @@ def main():
     print(f"batched  : verified cut vertices for "
           f"{[s['name'] for s in fleet]} in one dispatch")
 
-    # incremental: add redundant links, watch failure points disappear.
-    # (cuts must be re-asked on the full graph — the live certificate only
-    # preserves 2-EDGE connectivity; see DESIGN.md §Connectivity.)
+    # incremental: add redundant links, watch failure points disappear —
+    # LIVE for every kind. Cut-vertex queries ride the scan-first-search
+    # forest pair the engine keeps alongside the 2-edge certificate (the
+    # 2-edge pair alone provably does not preserve vertex cuts; DESIGN.md
+    # §Connectivity).
     engine.load(src, dst, n)
     u, v = sorted(sc["bridges"])[0]
     backup = (np.array([u], np.int32), np.array([v + 1], np.int32))
@@ -51,6 +60,19 @@ def main():
     print(f"after adding backup link {(u, v + 1)}: "
           f"{len(btree2)} bridge-tree edges (was {len(btree)})")
     assert len(btree2) < len(btree)
+
+    # live cut-vertex sequence: bypass the remaining cut vertices in turn
+    # and watch the articulation set shrink with every inserted edge
+    live_cuts = engine.current_analysis("cuts")
+    print(f"live cuts: {sorted(live_cuts)}")
+    for c in sorted(live_cuts):
+        lo, hi = c - 1, c + 1
+        got = engine.insert_edges(np.array([lo], np.int32),
+                                  np.array([hi], np.int32), kind="cuts")
+        print(f"  bypass {c} with link {(lo, hi)} -> cuts {sorted(got)}")
+        assert c not in got and len(got) < len(live_cuts)
+        live_cuts = got
+    assert live_cuts == set()
     print(f"engine   : {engine.cache_info()}")
 
 

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point (CPU): tier-1 tests + quickstart example + the perf-path
 # smoke benchmark suite (fig5 baseline crossover, fig6 engine, fig7
-# connectivity — each asserts its own no-retrace/sanity invariants, so a
-# perf-path regression fails the build). Usable locally (no installs needed
-# beyond jax/numpy/networkx) and from .github/workflows/ci.yml.
+# connectivity, fig8 distributed kinds — each asserts its own
+# no-retrace/sanity invariants, so a perf-path regression fails the build).
+# Usable locally (no installs needed beyond jax/numpy/networkx) and from
+# .github/workflows/ci.yml.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,5 +19,8 @@ python examples/quickstart.py
 
 echo "== benchmarks smoke suite (fig5 + fig6 + fig7) =="
 python -m benchmarks.run --only fig5,fig6,fig7 --smoke --json BENCH_ci_smoke.json
+
+echo "== fig8: per-kind merged-certificate qps (host schedule simulator) =="
+python -m benchmarks.run --only fig8 --smoke --json BENCH_fig8_distributed_kinds.json
 
 echo "CI OK"

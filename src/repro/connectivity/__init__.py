@@ -1,10 +1,14 @@
 # Failure-point analysis on top of the bridges pipeline (DESIGN.md
-# §Connectivity): articulation points, 2-edge-connected components, and the
-# bridge tree, all on fixed-shape device buffers, plus host Tarjan references.
+# §Connectivity, §Analysis registry): articulation points, 2-edge-connected
+# components, bridge tree, and biconnected blocks, all on fixed-shape device
+# buffers, plus host Tarjan references — and the Analysis registry that makes
+# each kind pluggable into every engine substrate.
 from repro.connectivity.common import tour_state
 from repro.connectivity.device import (
     articulation_mask,
     articulation_points,
+    bcc_blocks,
+    block_labels_from_state,
     bridge_mask,
     bridge_tree,
     bridges,
@@ -13,7 +17,17 @@ from repro.connectivity.device import (
 from repro.connectivity.host import (
     articulation_points_dfs,
     bridge_tree_dfs,
+    host_bcc_labels,
     two_ecc_labels_dfs,
+)
+from repro.connectivity.registry import (
+    ANALYSIS_KINDS,
+    Analysis,
+    analysis_kinds,
+    certificate_fn,
+    get_analysis,
+    normalize_kind,
+    register,
 )
 
 __all__ = [
@@ -22,9 +36,19 @@ __all__ = [
     "bridges",
     "articulation_mask",
     "articulation_points",
+    "bcc_blocks",
+    "block_labels_from_state",
     "two_ecc_labels",
     "bridge_tree",
     "articulation_points_dfs",
     "two_ecc_labels_dfs",
     "bridge_tree_dfs",
+    "host_bcc_labels",
+    "ANALYSIS_KINDS",
+    "Analysis",
+    "analysis_kinds",
+    "certificate_fn",
+    "get_analysis",
+    "normalize_kind",
+    "register",
 ]

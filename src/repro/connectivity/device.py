@@ -16,10 +16,15 @@ program each (jit/vmap-compatible), built from ``common.tour_state``:
   member vertex id (so device and host references agree exactly).
 * **bridge tree** — each bridge, relabeled by the 2ECC canonical labels of
   its endpoints, in a fixed (n-1)-slot buffer (a forest has < n edges).
+* **bcc blocks** — the Tarjan–Vishkin aux components themselves, exposed as
+  canonical per-tree-edge block labels (block name = min member vertex id),
+  from which blocks-as-vertex-sets are exactly recoverable.
 
 NOTE (DESIGN.md §Connectivity): bridges/2ECC/bridge-tree may run on the
-sparse 2-edge certificate; articulation points must run on the full edge
-set — arbitrary-forest F1 ∪ F2 certificates do not preserve vertex cuts.
+Borůvka 2-edge certificate; articulation points and bcc blocks are VERTEX
+connectivity, which arbitrary-forest F1 ∪ F2 pairs do not preserve — run
+them on the full edge set or on the scan-first-search certificate
+(``core.certificate.sfs_certificate``), which does.
 """
 from __future__ import annotations
 
@@ -35,8 +40,9 @@ from repro.graph.datastructs import INF32, INT, EdgeList, compact_edges
 
 
 # --------------------------------------------------------------- traced cores
-def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
-    """bool[n] articulation-point mask (Tarjan–Vishkin aux components).
+def block_labels_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
+    """int[C] biconnected-block label per tree edge (Tarjan–Vishkin aux
+    components) — the shared core of ``cuts`` and ``bcc``.
 
     Aux graph on child-vertex ids (tree edge (p(v), v) <-> aux vertex v):
       rule 1: each non-tree edge (u, w) with u, w unrelated in the tree
@@ -44,8 +50,8 @@ def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
       rule 2: each tree edge (v, w), w child, v non-root, joins aux w and
               aux v iff subtree(w) has a non-tree edge escaping subtree(v)
               (low(w) < disc(v) or high(w) > vhi(v)).
-    Aux components label each tree edge with its biconnected block; v is an
-    articulation point iff >= 2 distinct block labels touch v.
+    Aux components label each tree edge with its biconnected block; the
+    label is meaningful only where ``st["tree_mask"]``.
     """
     disc, vhi = st["disc"], st["vhi"]
     parent, child, tree_mask = st["parent"], st["child"], st["tree_mask"]
@@ -65,10 +71,15 @@ def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
     aux_dst = jnp.where(rule1, dst, jnp.where(rule2, parent, 0))
     aux_labels = connected_components(
         EdgeList(aux_src, aux_dst, rule1 | rule2, n))
+    return aux_labels[child]
 
-    # block label per tree edge; a vertex with two distinct incident block
-    # labels sits in two biconnected blocks => articulation point
-    blk = aux_labels[child]
+
+def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
+    """bool[n] articulation-point mask: a vertex whose incident tree edges
+    span >= 2 distinct biconnected blocks sits in two blocks => cut vertex
+    (every block containing v contains a tree edge at v)."""
+    parent, child, tree_mask = st["parent"], st["child"], st["tree_mask"]
+    blk = block_labels_from_state(src, dst, mask, n, st)
     ends = jnp.concatenate([parent, child])
     labs = jnp.concatenate([blk, blk])
     tm2 = jnp.concatenate([tree_mask, tree_mask])
@@ -77,6 +88,34 @@ def articulation_from_state(src, dst, mask, n: int, st: dict) -> jax.Array:
     mx = jax.ops.segment_max(jnp.where(tm2, labs, -1),
                              jnp.where(tm2, ends, 0), num_segments=n)
     return (mn < INF32) & (mx > mn)
+
+
+def bcc_from_state(src, dst, mask, n: int, st: dict):
+    """Per-tree-edge canonical biconnected block labels.
+
+    Returns ``(parent int[C], child int[C], block int[C], tree_mask
+    bool[C])``: each tree edge tagged with its block's label, canonicalized
+    to the block's minimum CHILD vertex id. Tree edges are identified by
+    their child vertices and blocks partition the tree edges, so the min
+    child is unique per block — unlike the min MEMBER, which two blocks
+    can share at their common cut vertex (e.g. two bridges at one hub).
+
+    Blocks-as-vertex-sets are exactly recoverable from tree edges alone: a
+    simple path between two vertices of a block never leaves the block
+    (re-entering would revisit the cut vertex it left through), so ANY
+    spanning tree restricted to a block spans it and the block's vertex set
+    is the endpoint set of its tree edges. That makes the recovered sets
+    identical across substrates — full buffer, SFS certificate, batched, or
+    distributed merged certificate — even though trees and labels differ.
+    """
+    parent, child, tree_mask = st["parent"], st["child"], st["tree_mask"]
+    blk = block_labels_from_state(src, dst, mask, n, st)
+    # canonical block name = min child vertex (labels live in [0, n))
+    bmin = jax.ops.segment_min(jnp.where(tree_mask, child, INF32),
+                               jnp.where(tree_mask, blk, 0), num_segments=n)
+    cblk = bmin[blk]
+    return (jnp.where(tree_mask, parent, 0), jnp.where(tree_mask, child, 0),
+            jnp.where(tree_mask, cblk, 0), tree_mask)
 
 
 def two_ecc_from_state(src, dst, mask, n: int, bridge) -> jax.Array:
@@ -119,6 +158,12 @@ def _two_ecc_impl(src, dst, mask, n: int):
     return two_ecc_from_state(src, dst, mask, n, st["bridge"])
 
 
+@partial(jax.jit, static_argnames=("n",))
+def _bcc_impl(src, dst, mask, n: int):
+    st = tour_state(src, dst, mask, n)
+    return bcc_from_state(src, dst, mask, n, st)
+
+
 @partial(jax.jit, static_argnames=("n", "capacity"))
 def _bridge_tree_impl(src, dst, mask, n: int, capacity: int):
     st = tour_state(src, dst, mask, n)
@@ -154,6 +199,29 @@ def articulation_points(edges: EdgeList) -> set[int]:
     """Host-facing articulation point set."""
     m = np.asarray(articulation_mask(edges))
     return set(int(v) for v in np.nonzero(m)[0])
+
+
+def bcc_blocks(edges: EdgeList) -> set[frozenset[int]]:
+    """Biconnected blocks as canonical vertex sets (host-facing).
+
+    Like ``articulation_mask`` this answers VERTEX connectivity, so run it
+    on the full edge buffer or on a scan-first-search certificate — never
+    on the arbitrary-forest 2-edge certificate (DESIGN.md §Connectivity).
+    """
+    out = _bcc_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+    return blocks_to_sets(out)
+
+
+def blocks_to_sets(out) -> set[frozenset[int]]:
+    """(parent, child, block, tree_mask) device buffers -> blocks as
+    canonical frozensets of vertex ids."""
+    p, c, lab, tm = (np.asarray(x) for x in out)
+    by_label: dict[int, set[int]] = {}
+    for i in np.nonzero(tm)[0]:
+        b = by_label.setdefault(int(lab[i]), set())
+        b.add(int(p[i]))
+        b.add(int(c[i]))
+    return set(frozenset(b) for b in by_label.values())
 
 
 def two_ecc_labels(edges: EdgeList) -> jax.Array:

@@ -65,6 +65,72 @@ def articulation_points_dfs(src: np.ndarray, dst: np.ndarray,
     return out
 
 
+def host_bcc_labels(src: np.ndarray, dst: np.ndarray,
+                    n_nodes: int) -> set[frozenset[int]]:
+    """Biconnected blocks as canonical vertex sets — iterative Tarjan BCC
+    with an explicit edge stack (matches ``networkx.biconnected_components``
+    up to set equality).
+
+    Works on the SIMPLE support: self loops never join a block and a
+    parallel copy changes which EDGES are biconnected but never a block's
+    vertex set, so multigraph inputs are deduplicated up front — the same
+    semantics the device analysis produces.
+    """
+    src = np.asarray(src).astype(np.int64)
+    dst = np.asarray(dst).astype(np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = np.minimum(src, dst) * n_nodes + np.maximum(src, dst)
+    _, first = np.unique(key, return_index=True)
+    src, dst = src[first], dst[first]
+    indptr, indices, eids = build_csr(src, dst, n_nodes)
+
+    disc = np.full(n_nodes, -1, np.int64)
+    low = np.zeros(n_nodes, np.int64)
+    ptr = indptr[:-1].copy()
+    blocks: set[frozenset[int]] = set()
+    estack: list[tuple[int, int]] = []
+    timer = 0
+    for root in range(n_nodes):
+        if disc[root] != -1:
+            continue
+        stack = [(root, -1)]  # (vertex, entering edge id)
+        disc[root] = low[root] = timer
+        timer += 1
+        while stack:
+            v, in_eid = stack[-1]
+            if ptr[v] < indptr[v + 1]:
+                w = int(indices[ptr[v]])
+                eid = int(eids[ptr[v]])
+                ptr[v] += 1
+                if eid == in_eid:
+                    continue  # don't reuse the entering edge instance
+                if disc[w] == -1:
+                    disc[w] = low[w] = timer
+                    timer += 1
+                    estack.append((v, w))
+                    stack.append((w, eid))
+                elif disc[w] < disc[v]:  # back edge (once, not from below)
+                    estack.append((v, w))
+                    low[v] = min(low[v], disc[w])
+            else:
+                stack.pop()
+                if stack:
+                    p, _ = stack[-1]
+                    low[p] = min(low[p], low[v])
+                    if low[v] >= disc[p]:
+                        # (p, v) closes a block: pop its edges off the stack
+                        block: set[int] = set()
+                        while estack:
+                            a, b = estack.pop()
+                            block.add(a)
+                            block.add(b)
+                            if (a, b) == (p, v):
+                                break
+                        blocks.add(frozenset(block))
+    return blocks
+
+
 def two_ecc_labels_dfs(src: np.ndarray, dst: np.ndarray,
                        n_nodes: int) -> np.ndarray:
     """int64[n] canonical 2ECC labels: union-find over non-bridge edges,

@@ -12,7 +12,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.forest import spanning_forest, spanning_forest_ex
+from repro.core.forest import (
+    scan_first_forest_ex,
+    spanning_forest,
+    spanning_forest_ex,
+)
 from repro.graph.datastructs import EdgeList, compact_edges, concat_edges
 
 
@@ -53,6 +57,52 @@ def sparse_certificate_ex(edges: EdgeList, capacity: int | None = None):
     f2, lab2, r2 = spanning_forest_ex(rest)
     cert = compact_edges(edges, cap, keep=f1 | f2)
     return cert, lab1, lab2, (r1, r2)
+
+
+def sfs_certificate(edges: EdgeList, capacity: int | None = None) -> EdgeList:
+    """Scan-first-search certificate: S = F1 ∪ F2 with F1 a BFS-layer
+    (scan-first) forest of G and F2 one of G − F1 (Cheriyan–Kao–Thurimella,
+    k = 2). Same 2(n−1) size bound as the Borůvka certificate, but the
+    layered forests additionally preserve VERTEX connectivity up to 2 —
+    articulation points and biconnected blocks of S match G, which the
+    arbitrary-forest pair provably does not (DESIGN.md §Connectivity).
+
+    Like the 2-edge certificate it composes under union: re-certifying the
+    union of two SFS certificates yields an SFS certificate of the union,
+    so the same merge schedules serve the vertex-connectivity kinds.
+    """
+    cert, _, _, _ = sfs_certificate_ex(edges, capacity=capacity)
+    return cert
+
+
+def sfs_certificate_ex(edges: EdgeList, capacity: int | None = None):
+    """SFS certificate + F1's (parent, level) pair (+ BFS rounds per pass).
+
+    parent/level are the live SFS forest state the engine keeps for
+    incremental vertex-cut serving (DESIGN.md §Analysis registry)."""
+    cap = certificate_capacity(edges.n_nodes) if capacity is None else capacity
+    f1, parent, level, _, r1 = scan_first_forest_ex(edges)
+    # F2 scans the SIMPLE complement of F1: a slot duplicating an F1 pair
+    # {v, parent(v)} adds nothing to vertex connectivity (unlike the 2-edge
+    # case, where the parallel copy is what protects the pair) and would
+    # waste an F2 forest slot that a genuinely new edge needs.
+    dup = (parent[edges.src] == edges.dst) | (parent[edges.dst] == edges.src)
+    rest = EdgeList(edges.src, edges.dst, edges.mask & ~f1 & ~dup,
+                    edges.n_nodes)
+    f2, _, _, _, r2 = scan_first_forest_ex(rest)
+    cert = compact_edges(edges, cap, keep=f1 | f2)
+    return cert, parent, level, (r1, r2)
+
+
+#: certificate type -> builder (EdgeList, capacity=...) -> EdgeList.
+#: "2ec" preserves min(λ(x,y), 2) — bridges, 2ECC, bridge tree; "sfs"
+#: additionally preserves vertex connectivity up to 2 — articulation
+#: points and biconnected blocks. The connectivity analysis registry
+#: (repro.connectivity.registry) keys each query kind to one of these.
+CERTIFICATE_BUILDERS = {
+    "2ec": sparse_certificate,
+    "sfs": sfs_certificate,
+}
 
 
 def merge_certificates_incremental(own: EdgeList, f1_labels, f2_labels,

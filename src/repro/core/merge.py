@@ -19,7 +19,12 @@ Three schedules, all running on fixed 2(n−1)-slot certificate buffers:
     certificate-sized message crosses pods.
 
 Certificate union is associative, commutative, and idempotent, which is what
-makes all three schedules compute the same final certificate.
+makes all three schedules compute the same final certificate. The phases are
+certificate-type-generic: the 2-edge Borůvka pair AND the scan-first-search
+pair (``core.certificate.CERTIFICATE_BUILDERS``) both compose under
+union-then-recertify, so ``build_distributed_analysis_fn`` serves EVERY kind
+in the analysis registry — each kind's merge phases exchange the certificate
+its descriptor declares safe (DESIGN.md §Analysis registry).
 """
 from __future__ import annotations
 
@@ -31,14 +36,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bridges_device import bridge_mask_device
 from repro.core.certificate import (
+    CERTIFICATE_BUILDERS,
     certificate_capacity,
     merge_certificates_incremental,
     sparse_certificate,
     sparse_certificate_ex,
 )
-from repro.graph.datastructs import EdgeList, compact_edges, concat_edges
+from repro.graph.datastructs import INT, EdgeList, compact_edges, concat_edges
 
 
 def _axis_size(mesh, axes):
@@ -66,14 +71,15 @@ def _phase_perm(schedule: str, m: int, q: int):
     return [(i, i ^ stride) for i in range(m) if (i ^ stride) < m]
 
 
-def _merge_phases_one_axis(cert: EdgeList, axes, m: int, schedule: str) -> EdgeList:
+def _merge_phases_one_axis(cert: EdgeList, axes, m: int, schedule: str,
+                           certify) -> EdgeList:
     """Run log2(m) merge phases over one (possibly flattened) mesh axis."""
     phases = max(int(math.ceil(math.log2(m))), 0)
     for q in range(phases):
         perm = _phase_perm(schedule, m, q)
         recv = _ppermute_edges(cert, axes, perm)
         # non-receivers get zeros => recv.mask all-False => union is a no-op
-        cert = sparse_certificate(
+        cert = certify(
             concat_edges(cert, recv), capacity=certificate_capacity(cert.n_nodes)
         )
     return cert
@@ -98,7 +104,8 @@ def _merge_phases_one_axis_inc(cert: EdgeList, lab1, lab2, axes, m: int,
 
 def merged_certificate(local: EdgeList, mesh, machine_axes,
                        schedule: str = "paper",
-                       merge: str = "recertify") -> EdgeList:
+                       merge: str = "recertify",
+                       certificate: str = "2ec") -> EdgeList:
     """Inside-shard_map body: local edge shard -> global sparse certificate.
 
     ``machine_axes``: tuple of mesh axis names acting as "machines". For
@@ -108,9 +115,16 @@ def merged_certificate(local: EdgeList, mesh, machine_axes,
     ``merge``: ``recertify`` (paper-faithful re-certification of the union
     each phase) or ``incremental`` (warm-start deltas — beyond-paper,
     SPerf bridges iteration; identical output certificate semantics).
+
+    ``certificate``: ``2ec`` (Borůvka pair) or ``sfs`` (scan-first pair,
+    serving the vertex-connectivity kinds). The warm-start labels are a
+    Borůvka-hooking primitive, so ``merge='incremental'`` falls back to
+    re-certification for ``sfs`` — BFS layers shift globally on union and
+    do not warm-start.
     """
+    certify = CERTIFICATE_BUILDERS[certificate]
     cap = certificate_capacity(local.n_nodes)
-    if merge == "incremental":
+    if merge == "incremental" and certificate == "2ec":
         cert, lab1, lab2, _ = sparse_certificate_ex(local, capacity=cap)
         if schedule in ("paper", "xor"):
             m = _axis_size(mesh, machine_axes)
@@ -125,18 +139,78 @@ def merged_certificate(local: EdgeList, mesh, machine_axes,
         else:
             raise ValueError(f"unknown schedule {schedule!r}")
         return cert
-    if merge != "recertify":
+    if merge not in ("recertify", "incremental"):
         raise ValueError(f"unknown merge mode {merge!r}")
-    cert = sparse_certificate(local, capacity=cap)
+    cert = certify(local, capacity=cap)
     if schedule in ("paper", "xor"):
         m = _axis_size(mesh, machine_axes)
-        cert = _merge_phases_one_axis(cert, tuple(machine_axes), m, schedule)
+        cert = _merge_phases_one_axis(cert, tuple(machine_axes), m, schedule,
+                                      certify)
     elif schedule == "hierarchical":
         for ax in reversed(tuple(machine_axes)):
-            cert = _merge_phases_one_axis(cert, ax, mesh.shape[ax], "xor")
+            cert = _merge_phases_one_axis(cert, ax, mesh.shape[ax], "xor",
+                                          certify)
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
     return cert
+
+
+def build_distributed_analysis_fn(
+    mesh,
+    machine_axes,
+    n_nodes: int,
+    schedule: str = "paper",
+    final: str = "device",
+    merge: str = "recertify",
+    kind: str = "bridges",
+):
+    """Return a jit-able fn: sharded (src, dst, mask)[M, cap] -> per-machine
+    result buffers [M, ...] for ANY analysis-registry kind.
+
+    The returned function is a single XLA program: per-machine certificates
+    of the kind's declared type, merge phases (collectives), and (for
+    final='device') the kind's PRAM final stage on the merged certificate.
+    final='host' returns the merged certificate itself; the host then runs
+    the kind's sequential reference on the answering machine's shard.
+    """
+    # Imported lazily: the registry builds on core's pipeline stages, so a
+    # module-level import here would be circular (same rule as
+    # core/bridges_device.py).
+    from repro.connectivity.common import tour_state
+    from repro.connectivity.registry import get_analysis
+
+    analysis = get_analysis(kind)
+    axes = tuple(machine_axes) if not isinstance(machine_axes, str) else (machine_axes,)
+    cert_cap = certificate_capacity(n_nodes)
+    out_cap = max(n_nodes - 1, 1)
+
+    in_spec = P(axes, None)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(in_spec, in_spec, in_spec),
+        # single-spec prefix: every result leaf is machine-sharded
+        out_specs=P(axes, None),
+        # while_loop carries mix device-invariant constants (arange labels)
+        # with shard-varying data; skip the vma type check.
+        check_vma=False,
+    )
+    def _body(psrc, pdst, pmask):
+        local = EdgeList(psrc[0], pdst[0], pmask[0], n_nodes)
+        cert = merged_certificate(local, mesh, axes, schedule, merge,
+                                  certificate=analysis.certificate)
+        if final == "device":
+            st = tour_state(cert.src, cert.dst, cert.mask, n_nodes)
+            out = analysis.device_fn(cert.src, cert.dst, cert.mask, n_nodes,
+                                     st, out_cap)
+        else:
+            # final='host': return the certificate; host runs the reference
+            o = compact_edges(cert, cert_cap)
+            out = (o.src, o.dst, o.mask)
+        return jax.tree_util.tree_map(lambda x: x[None], out)
+
+    return _body
 
 
 def build_distributed_bridges_fn(
@@ -147,40 +221,72 @@ def build_distributed_bridges_fn(
     final: str = "device",
     merge: str = "recertify",
 ):
-    """Return a jit-able fn: sharded (src, dst, mask)[M, cap] -> bridge EdgeList.
+    """Thin alias: the kind='bridges' distributed analysis (kept for the
+    paper-pipeline call sites; new code should pass ``kind=`` directly)."""
+    return build_distributed_analysis_fn(
+        mesh, machine_axes, n_nodes, schedule=schedule, final=final,
+        merge=merge, kind="bridges")
 
-    The returned function is a single XLA program: per-machine certificates,
-    merge phases (collectives), and (for final='device') the PRAM bridge
-    extraction — this is what the multi-pod dry-run lowers.
+
+# ------------------------------------------------------------ host simulator
+def empty_certificate(n_nodes: int, capacity: int | None = None) -> EdgeList:
+    """All-masked-off buffer: what ppermute non-receivers see (union no-op)."""
+    cap = certificate_capacity(n_nodes) if capacity is None else capacity
+    return EdgeList(jnp.zeros((cap,), INT), jnp.zeros((cap,), INT),
+                    jnp.zeros((cap,), bool), n_nodes)
+
+
+def simulate_merge_host(certs, schedule: str, certify=None, grid=None):
+    """Host-side simulation of one merge schedule: no collectives, the REAL
+    ``_phase_perm`` driven machine-by-machine on a list of per-machine
+    certificates. Mirrors ``_merge_phases_one_axis`` exactly, including the
+    SPMD detail that non-receivers re-certify against an empty buffer.
+
+    ``certify`` is the per-phase certificate builder (default: the 2-edge
+    ``sparse_certificate``; pass ``sfs_certificate`` — or look it up via the
+    registry — for the vertex-connectivity kinds). ``grid=(rows, cols)``
+    lays the machines out for ``hierarchical`` (cols = fastest axis, merged
+    first). Returns the per-machine certificates after all phases; under
+    ``paper`` machine 0 answers, under ``xor``/``hierarchical`` every
+    machine holds the global certificate.
+
+    This is what makes the schedule-equivalence property testable in a
+    single-device environment (tests/test_schedules.py) and what
+    benchmarks/fig8_distributed_kinds.py times per kind.
     """
-    axes = tuple(machine_axes) if not isinstance(machine_axes, str) else (machine_axes,)
-    cert_cap = certificate_capacity(n_nodes)
-    bridge_cap = max(n_nodes - 1, 1)
+    certify = sparse_certificate if certify is None else certify
+    n = certs[0].n_nodes
+    cap = certs[0].capacity
+    empty = empty_certificate(n, cap)
 
-    in_spec = P(axes, None)
-    out_spec = P(axes, None)
+    def step(a, b):
+        return certify(concat_edges(a, b),
+                       capacity=certificate_capacity(n))
 
-    @partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(in_spec, in_spec, in_spec),
-        out_specs=(out_spec, out_spec, out_spec),
-        # while_loop carries mix device-invariant constants (arange labels)
-        # with shard-varying data; skip the vma type check.
-        check_vma=False,
-    )
-    def _body(psrc, pdst, pmask):
-        local = EdgeList(psrc[0], pdst[0], pmask[0], n_nodes)
-        cert = merged_certificate(local, mesh, axes, schedule, merge)
-        if final == "device":
-            bm = bridge_mask_device(cert)
-            out = compact_edges(cert, bridge_cap, keep=bm)
-        else:
-            # final='host': return the certificate itself; host runs Tarjan DFS
-            out = compact_edges(cert, cert_cap)
-        return out.src[None], out.dst[None], out.mask[None]
+    def run_phases(cs, sched):
+        m = len(cs)
+        phases = max(int(math.ceil(math.log2(m))), 0)
+        for q in range(phases):
+            perm = _phase_perm(sched, m, q)
+            recv = {d: cs[s] for (s, d) in perm}
+            cs = [step(cs[i], recv.get(i, empty)) for i in range(m)]
+        return cs
 
-    return _body
+    if schedule in ("paper", "xor"):
+        return run_phases(list(certs), schedule)
+    if schedule != "hierarchical":
+        raise ValueError(f"unknown schedule {schedule!r}")
+    m = len(certs)
+    rows, cols = grid if grid is not None else (2, m // 2)
+    if rows * cols != m:
+        raise ValueError(f"grid {rows}x{cols} != {m} machines")
+    g = [list(certs[r * cols:(r + 1) * cols]) for r in range(rows)]
+    g = [run_phases(row, "xor") for row in g]
+    for c in range(cols):
+        col = run_phases([g[r][c] for r in range(rows)], "xor")
+        for r in range(rows):
+            g[r][c] = col[r]
+    return [cert for row in g for cert in row]
 
 
 def result_shard_zero(arr):

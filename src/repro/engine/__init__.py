@@ -1,6 +1,6 @@
 # Compile-once, shape-bucketed, batched + incrementally-updatable query
-# engine over the paper's bridges pipeline and the connectivity analyses
-# (see DESIGN.md §Engine / §Connectivity).
+# engine over the paper's bridges pipeline and the analysis registry's
+# connectivity kinds (see DESIGN.md §Engine / §Analysis registry).
 from repro.engine.batched import (
     ANALYSIS_KINDS,
     BatchedEdgeList,

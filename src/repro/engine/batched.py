@@ -2,11 +2,11 @@
 
 ``BatchedEdgeList`` stacks B same-capacity edge buffers so B independent
 graphs resolve in ONE device dispatch: every analysis pipeline (certificate
--> forest -> bridges, and the connectivity kinds — cuts / 2ecc /
-bridge_tree) is rank-polymorphic jnp code, so a single ``jax.vmap`` lifts
-it to the batch. All graphs in a batch share one (n_nodes, capacity) shape
-bucket — that is what makes the batched program compile once and serve any
-mix of nearby graph sizes (see DESIGN.md §Engine, §Connectivity).
+-> tour -> final stage, for every kind in the analysis registry) is
+rank-polymorphic jnp code, so a single ``jax.vmap`` lifts it to the batch.
+All graphs in a batch share one (n_nodes, capacity) shape bucket — that is
+what makes the batched program compile once and serve any mix of nearby
+graph sizes (see DESIGN.md §Engine, §Analysis registry).
 """
 from __future__ import annotations
 
@@ -18,27 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.connectivity.common import tour_state
-from repro.connectivity.device import (
-    articulation_from_state,
-    bridge_tree_from_state,
-    two_ecc_from_state,
+from repro.connectivity.registry import (  # noqa: F401  (re-exports)
+    ANALYSIS_KINDS,
+    certificate_fn,
+    get_analysis,
+    normalize_kind,
 )
-from repro.core.certificate import sparse_certificate
-from repro.graph.datastructs import INT, EdgeList, compact_edges, pad_edges
-
-#: query kinds every engine entry point accepts ("bridge-tree" is accepted
-#: as an alias for "bridge_tree").
-ANALYSIS_KINDS = ("bridges", "cuts", "2ecc", "bridge_tree")
-
-
-def normalize_kind(kind: str) -> str:
-    k = str(kind).replace("-", "_").lower()
-    if k == "two_ecc":
-        k = "2ecc"
-    if k not in ANALYSIS_KINDS:
-        raise ValueError(
-            f"unknown analysis kind {kind!r}; choose from {ANALYSIS_KINDS}")
-    return k
+from repro.core.certificate import certificate_capacity
+from repro.graph.datastructs import INT, EdgeList, pad_edges
 
 
 @partial(
@@ -104,48 +91,41 @@ class BatchedEdgeList:
 
 def make_analysis_fn(n_nodes: int, kind: str = "bridges",
                      final: str = "device", on_trace=None):
-    """The un-vmapped query core for one analysis kind.
+    """The un-vmapped query core for one analysis kind, registry-driven.
 
-    ``(src, dst, mask) ->``
-      bridges     : (s, d, m) bridge buffer, or the sparse certificate when
-                    final='host' (host Tarjan runs on it afterwards)
-      cuts        : bool[n] articulation-point mask — computed on the FULL
-                    edge buffer, because the 2-edge certificate does not
-                    preserve vertex cuts (DESIGN.md §Connectivity)
-      2ecc        : int32[n] canonical 2ECC labels (on the certificate)
-      bridge_tree : (s, d, m) buffer of 2ECC supernode pairs (certificate)
+    ``(src, dst, mask) ->`` the kind's declared device buffers (see
+    ``Analysis.out_struct`` / DESIGN.md §Analysis registry), or — with
+    ``final='host'`` — the kind's sparse certificate, on which the caller
+    runs the kind's sequential host reference afterwards.
 
-    This single function is the pipeline body for BOTH the engine's
-    single-graph programs and, lifted by ``jax.vmap``, the batched ones.
+    Every kind follows the same registry-declared shape: pick the buffer
+    the kind's ``device_input`` names (its certificate for the 2-edge
+    kinds, the raw input buffer for the vertex kinds — every tour
+    primitive is polylog-round, so the O(diameter) SFS certificate is
+    only built where a bounded exchange format is actually needed), take
+    one shared ``tour_state`` pass over it, and apply the kind's
+    final-stage test. This single function is the pipeline body for BOTH
+    the engine's single-graph programs and, lifted by ``jax.vmap``, the
+    batched ones.
     """
-    kind = normalize_kind(kind)
+    analysis = get_analysis(kind)
     if final not in ("device", "host"):
         raise ValueError(f"unknown final stage {final!r}")
-    if final == "host" and kind != "bridges":
-        raise ValueError(f"final='host' only applies to kind='bridges', "
-                         f"not {kind!r}")
+    cert_cap = certificate_capacity(n_nodes)
     out_cap = max(n_nodes - 1, 1)
+    certify = certificate_fn(analysis.certificate)
 
     def one(src, dst, mask):
         if on_trace is not None:
             on_trace()
-        if kind == "cuts":
-            st = tour_state(src, dst, mask, n_nodes)
-            return articulation_from_state(src, dst, mask, n_nodes, st)
-        cert = sparse_certificate(EdgeList(src, dst, mask, n_nodes))
-        if final == "host":  # kind == "bridges"
-            return cert.src, cert.dst, cert.mask
-        st = tour_state(cert.src, cert.dst, cert.mask, n_nodes)
-        if kind == "bridges":
-            out = compact_edges(cert, out_cap, keep=st["bridge"])
-            return out.src, out.dst, out.mask
-        ecc = two_ecc_from_state(cert.src, cert.dst, cert.mask, n_nodes,
-                                 st["bridge"])
-        if kind == "2ecc":
-            return ecc
-        out = bridge_tree_from_state(cert.src, cert.dst, cert.mask, n_nodes,
-                                     st["bridge"], ecc, out_cap)
-        return out.src, out.dst, out.mask
+        buf = EdgeList(src, dst, mask, n_nodes)
+        if final == "host" or analysis.device_input == "certificate":
+            buf = certify(buf, capacity=cert_cap)
+        if final == "host":
+            return buf.src, buf.dst, buf.mask
+        st = tour_state(buf.src, buf.dst, buf.mask, n_nodes)
+        return analysis.device_fn(buf.src, buf.dst, buf.mask, n_nodes,
+                                  st, out_cap)
 
     return one
 

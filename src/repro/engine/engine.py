@@ -15,15 +15,22 @@ that into the three properties a query-serving deployment needs:
   independent graphs into a ``BatchedEdgeList`` and resolve them in one
   vmapped device dispatch.
 
-* **multi-kind** — ``analyze(..., kind=...)`` serves the whole failure-point
-  family (bridges, articulation points, 2ECC labels, bridge tree) through
-  the same program cache; see ``repro.connectivity`` for the analyses and
-  DESIGN.md §Connectivity for which kinds may run on the certificate.
+* **multi-kind** — ``analyze(..., kind=...)`` serves every kind in the
+  analysis registry (bridges, articulation points, 2ECC labels, bridge
+  tree, biconnected blocks) through the same program cache. The engine
+  contains ZERO kind-specific code: each ``repro.connectivity.registry``
+  descriptor declares its certificate type, device final stage, host
+  reference, and result conversion, and the engine dispatches through it
+  on every substrate — single-device, batched, distributed, incremental
+  (DESIGN.md §Analysis registry).
 
-* **incremental** — ``load`` computes the live sparse certificate plus both
-  spanning-forest label vectors; ``insert_edges`` folds an edge delta in via
-  the warm-start ``merge_certificates_incremental`` primitive and re-runs
-  only the final bridge-extraction stage, instead of the full pipeline.
+* **incremental** — ``load`` computes the live Borůvka 2-edge certificate
+  with warm-start labels; the scan-first-search pair that additionally
+  preserves vertex cuts is materialized lazily on the first cuts/bcc
+  query and maintained per delta from then on, so 2-edge-only serving
+  keeps the PR 1 update cost. ``insert_edges`` folds an edge delta into
+  the live state and re-runs only the final analysis stage, never the
+  full pipeline.
 
 Bucketing the vertex count is sound because every stage treats the extra
 vertices as isolated: they join no component, appear on no tour, and can
@@ -40,14 +47,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.connectivity.common import tour_state
-from repro.connectivity.device import (
-    bridge_tree_from_state,
-    two_ecc_from_state,
-)
-from repro.core.bridges_host import bridges_dfs
+from repro.connectivity.registry import get_analysis
 from repro.core.certificate import (
     certificate_capacity,
     merge_certificates_incremental,
+    sfs_certificate,
     sparse_certificate_ex,
 )
 from repro.engine.batched import (
@@ -56,7 +60,11 @@ from repro.engine.batched import (
     make_batched_pipeline,
     normalize_kind,
 )
-from repro.graph.datastructs import EdgeList, bucket_capacity, compact_edges
+from repro.graph.datastructs import (
+    EdgeList,
+    bucket_capacity,
+    concat_edges,
+)
 
 
 @dataclasses.dataclass
@@ -76,22 +84,24 @@ class EngineStats:
         self.hits = self.misses = self.traces = 0
 
 
-def _pairs(src, dst, mask) -> set[tuple[int, int]]:
-    m = np.asarray(mask)
-    s = np.asarray(src)[m]
-    d = np.asarray(dst)[m]
-    return set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
+def _masked_arrays(out):
+    """(src, dst, mask) device buffers -> host (src[mask], dst[mask])."""
+    s, d, m = (np.asarray(x) for x in out)
+    return s[m], d[m]
 
 
 class BridgeEngine:
-    """Persistent bridge-query engine (single-device or distributed).
+    """Persistent connectivity-query engine (single-device or distributed).
 
     Single-device (``mesh=None``): certificate + final stage, compile-cached
     per shape bucket, with batched and incremental entry points.
 
     Distributed (``mesh=...``): the paper's full pipeline (partition,
     per-machine certificates, merge schedule, final stage) with the built
-    shard_map program cached per (n_nodes, shard-capacity bucket).
+    shard_map program cached per (kind, n_nodes, shard-capacity bucket).
+    Every registry kind is served: the merge phases exchange whichever
+    certificate the kind declares (2ec or sfs), both of which compose under
+    union-merge.
     """
 
     def __init__(self, *, mesh=None, machine_axes=None, schedule: str = "paper",
@@ -140,18 +150,6 @@ class BridgeEngine:
         return jax.jit(make_analysis_fn(n_bucket, kind, final,
                                         self._tick_trace))
 
-    @staticmethod
-    def _to_result(kind: str, out, n_nodes: int):
-        """Device buffers -> host-facing result for one analysis kind."""
-        if kind == "cuts":
-            m = np.asarray(out)[:n_nodes]
-            return set(int(v) for v in np.nonzero(m)[0])
-        if kind == "2ecc":
-            # padding vertices are isolated singletons, so trimming is exact
-            return np.asarray(out)[:n_nodes].copy()
-        s, d, m = out
-        return _pairs(s, d, m)
-
     def analyze(self, src, dst, n_nodes: int, *, kind: str = "bridges",
                 final: str = "device", seed: int = 0):
         """One graph, one analysis kind; compile-once per shape bucket.
@@ -160,48 +158,35 @@ class BridgeEngine:
         kind='cuts'        -> set[int] articulation points
         kind='2ecc'        -> int array[n_nodes] canonical 2ECC labels
         kind='bridge_tree' -> set[(a, b)] 2ECC supernode pairs
+        kind='bcc'         -> set[frozenset[int]] biconnected blocks
+
+        ``final='host'`` answers with the kind's sequential host reference
+        run on the kind's sparse certificate instead of the device final
+        stage. ``seed`` only affects the distributed edge partition.
         """
-        kind = normalize_kind(kind)
-        if kind == "bridges":
-            return self.find_bridges(src, dst, n_nodes, final=final,
-                                     seed=seed)
-        if final != "device":
-            raise ValueError(f"final={final!r} only applies to "
-                             f"kind='bridges', not {kind!r}")
+        analysis = get_analysis(kind)
+        kind = analysis.kind
         if self.mesh is not None:
-            raise NotImplementedError(
-                f"kind={kind!r} is single-device for now: the distributed "
-                "merge schedules exchange 2-edge certificates (see DESIGN.md "
-                "§Connectivity and ROADMAP open items)")
+            return self._analyze_distributed(src, dst, n_nodes, kind=kind,
+                                             final=final, seed=seed)
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         n_bucket = self._bucket(n_nodes)
         cap = self._bucket(max(len(src), 1))
         el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        key = ("single", kind, "device", n_bucket, cap, self.backend, None)
+        key = ("single", kind, final, n_bucket, cap, self.backend, None)
         fn = self._program(
-            key, lambda: self._build_single(n_bucket, kind, "device"))
-        return self._to_result(kind, fn(el.src, el.dst, el.mask), n_nodes)
+            key, lambda: self._build_single(n_bucket, kind, final))
+        out = fn(el.src, el.dst, el.mask)
+        if final == "host":
+            return analysis.host_fn(*_masked_arrays(out), n_nodes)
+        return analysis.to_result(out, n_nodes)
 
     def find_bridges(self, src, dst, n_nodes: int, *, final: str = "device",
                      seed: int = 0) -> set[tuple[int, int]]:
         """Bridges of one graph. Same contract as ``core.find_bridges``."""
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        if self.mesh is not None:
-            return self._find_bridges_distributed(src, dst, n_nodes,
-                                                  final=final, seed=seed)
-        n_bucket = self._bucket(n_nodes)
-        cap = self._bucket(max(len(src), 1))
-        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        key = ("single", "bridges", final, n_bucket, cap, self.backend, None)
-        fn = self._program(
-            key, lambda: self._build_single(n_bucket, "bridges", final))
-        s, d, m = fn(el.src, el.dst, el.mask)
-        if final == "host":
-            mm = np.asarray(m)
-            return bridges_dfs(np.asarray(s)[mm], np.asarray(d)[mm], n_nodes)
-        return _pairs(s, d, m)
+        return self.analyze(src, dst, n_nodes, kind="bridges", final=final,
+                            seed=seed)
 
     def find_cuts(self, src, dst, n_nodes: int) -> set[int]:
         """Articulation points (cut vertices) of one graph."""
@@ -215,6 +200,10 @@ class BridgeEngine:
         """Bridge tree edges as pairs of canonical 2ECC labels."""
         return self.analyze(src, dst, n_nodes, kind="bridge_tree")
 
+    def find_bcc(self, src, dst, n_nodes: int) -> set[frozenset[int]]:
+        """Biconnected blocks as canonical vertex sets."""
+        return self.analyze(src, dst, n_nodes, kind="bcc")
+
     # ----------------------------------------------------------------- batched
     def analyze_batch(self, graphs, n_nodes, *, kind: str = "bridges",
                       final: str = "device") -> list:
@@ -224,7 +213,8 @@ class BridgeEngine:
         count, or a per-graph sequence (bucketed to the max). Returns the
         per-graph results in order, typed per ``analyze``'s kind table.
         """
-        kind = normalize_kind(kind)
+        analysis = get_analysis(kind)
+        kind = analysis.kind
         if self.mesh is not None:
             raise NotImplementedError(
                 "batched dispatch is single-device; use mesh=None")
@@ -251,17 +241,18 @@ class BridgeEngine:
                                           kind=kind),
         )
         out_dev = fn(bel.src, bel.dst, bel.mask)
-        if kind in ("cuts", "2ecc"):
-            rows = np.asarray(out_dev)
-            return [self._to_result(kind, rows[i], n)
-                    for i, n in enumerate(ns)]
-        s, d, m = (np.asarray(x) for x in out_dev)
+        stacked = (tuple(np.asarray(x) for x in out_dev)
+                   if isinstance(out_dev, (tuple, list))
+                   else (np.asarray(out_dev),))
         out = []
         for i, n in enumerate(ns):
-            if final == "host":  # kind == "bridges"
-                out.append(bridges_dfs(s[i][m[i]], d[i][m[i]], n))
+            row = tuple(x[i] for x in stacked)
+            if final == "host":
+                s, d, m = row
+                out.append(analysis.host_fn(s[m], d[m], n))
             else:
-                out.append(_pairs(s[i], d[i], m[i]))
+                out.append(analysis.to_result(
+                    row if len(row) > 1 else row[0], n))
         return out
 
     def find_bridges_batch(self, graphs, n_nodes, *, final: str = "device",
@@ -282,6 +273,10 @@ class BridgeEngine:
                                ) -> list[set[tuple[int, int]]]:
         """Batched bridge trees: B graphs, one vmapped dispatch."""
         return self.analyze_batch(graphs, n_nodes, kind="bridge_tree")
+
+    def find_bcc_batch(self, graphs, n_nodes) -> list[set[frozenset[int]]]:
+        """Batched biconnected blocks: B graphs, one vmapped dispatch."""
+        return self.analyze_batch(graphs, n_nodes, kind="bcc")
 
     # ------------------------------------------------------------- incremental
     def _build_load(self, n_bucket: int):
@@ -306,28 +301,69 @@ class BridgeEngine:
 
         return jax.jit(run)
 
+    def _build_insert_sfs(self, n_bucket: int):
+        """Delta fold-in for the live SFS pair. BFS layers shift globally
+        under union, so there is no warm start — but re-scanning the
+        bounded cert ∪ delta buffer keeps the update O(n + Δ), never O(E),
+        with the same shape every call."""
+        cert_cap = certificate_capacity(n_bucket)
+
+        def run(ss, sd, sm, rs, rd, rm):
+            self._tick_trace()
+            scert = sfs_certificate(
+                concat_edges(EdgeList(ss, sd, sm, n_bucket),
+                             EdgeList(rs, rd, rm, n_bucket)),
+                capacity=cert_cap)
+            return scert.src, scert.dst, scert.mask
+
+        return jax.jit(run)
+
+    def _build_sfs_load(self, n_bucket: int):
+        cert_cap = certificate_capacity(n_bucket)
+
+        def run(src, dst, mask):
+            self._tick_trace()
+            scert = sfs_certificate(EdgeList(src, dst, mask, n_bucket),
+                                    capacity=cert_cap)
+            return scert.src, scert.dst, scert.mask
+
+        return jax.jit(run)
+
+    def _materialize_sfs(self) -> tuple:
+        """Lazy second certificate: the scan-first-search pair is only
+        computed (from the host-retained edge record) on the FIRST
+        vertex-connectivity query, so 2-edge-only incremental workloads
+        never pay the BFS passes. Once live it is maintained on device per
+        delta and the host record is dropped."""
+        live = self._live
+        if live["sfs"] is None:
+            src, dst = live["host_edges"]
+            n_bucket = live["n_bucket"]
+            cap = self._bucket(max(len(src), 1))
+            el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+            key = ("sfs_load", n_bucket, cap, self.backend, None)
+            fn = self._program(key, lambda: self._build_sfs_load(n_bucket))
+            live["sfs"] = tuple(fn(el.src, el.dst, el.mask))
+            live["host_edges"] = None  # device state carries it from here
+        return live["sfs"]
+
     def _build_final(self, n_bucket: int, kind: str):
-        """Final analysis stage over the live certificate (no re-certify)."""
+        """Final analysis stage over the kind's live certificate."""
+        analysis = get_analysis(kind)
         out_cap = max(n_bucket - 1, 1)
 
         def run(cs, cd, cm):
             self._tick_trace()
             st = tour_state(cs, cd, cm, n_bucket)
-            if kind == "bridges":
-                out = compact_edges(EdgeList(cs, cd, cm, n_bucket), out_cap,
-                                    keep=st["bridge"])
-                return out.src, out.dst, out.mask
-            ecc = two_ecc_from_state(cs, cd, cm, n_bucket, st["bridge"])
-            if kind == "2ecc":
-                return ecc
-            out = bridge_tree_from_state(cs, cd, cm, n_bucket, st["bridge"],
-                                         ecc, out_cap)
-            return out.src, out.dst, out.mask
+            return analysis.device_fn(cs, cd, cm, n_bucket, st, out_cap)
 
         return jax.jit(run)
 
     def load(self, src, dst, n_nodes: int) -> "BridgeEngine":
-        """Set the engine's live graph: certificate + warm-start labels."""
+        """Set the engine's live graph: the warm-start Borůvka certificate
+        pair, computed now, plus a lazily-materialized scan-first-search
+        pair for the vertex-connectivity kinds (see ``_materialize_sfs`` —
+        2-edge-only serving pays nothing for it)."""
         if self.mesh is not None:
             raise NotImplementedError(
                 "incremental updates are single-device; use mesh=None")
@@ -340,34 +376,37 @@ class BridgeEngine:
         fn = self._program(key, lambda: self._build_load(n_bucket))
         cs, cd, cm, lab1, lab2 = fn(el.src, el.dst, el.mask)
         self._live = {
-            "src": cs, "dst": cd, "mask": cm, "lab1": lab1, "lab2": lab2,
+            "2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2,
+            "sfs": None, "host_edges": (src, dst),
             "n_nodes": int(n_nodes), "n_bucket": n_bucket,
         }
         return self
 
     @property
     def num_live_edges(self) -> int:
-        """Edge count of the live certificate (<= 2(n-1) by Lemma 1)."""
+        """Edge count of the live 2-edge certificate (<= 2(n-1), Lemma 1)."""
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
-        return int(np.asarray(self._live["mask"]).sum())
+        return int(np.asarray(self._live["2ec"][2]).sum())
 
     def insert_edges(self, src, dst, *, final: str = "device",
                      kind: str = "bridges"):
-        """Fold an edge delta into the live certificate, return the updated
-        analysis (any 2-edge-connectivity kind; see ``current_analysis``).
+        """Fold an edge delta into the live certificates, return the updated
+        analysis for ANY registry kind (see ``current_analysis``).
 
-        The warm-start labels make the two delta forest passes scan only the
-        delta buffer with hooking starting from the existing partition; the
-        full certificate pipeline is NOT re-run — only the final analysis
-        stage over the (bounded, fixed-shape) live certificate.
+        The 2-edge pair updates via the warm-start
+        ``merge_certificates_incremental`` (two delta forest passes
+        scanning only the delta buffer — the PR 1/PR 2 hot path,
+        unchanged). The scan-first-search pair — what makes
+        ``kind='cuts'`` and ``'bcc'`` serveable incrementally, since the
+        2-edge-only live state provably does not preserve vertex cuts
+        (DESIGN.md §Connectivity counterexample, pinned as a regression
+        test) — updates by re-scanning the bounded cert ∪ delta buffer,
+        but only once some vertex-connectivity query has materialized it;
+        until then deltas are appended to the host edge record and the
+        BFS passes cost nothing. The full pipeline is never re-run.
         """
         kind = normalize_kind(kind)
-        if kind == "cuts":  # refuse BEFORE mutating the live state
-            raise NotImplementedError(
-                "the live state is a 2-edge certificate, which does not "
-                "preserve articulation points; run analyze(..., kind='cuts') "
-                "on the full edge set instead (DESIGN.md §Connectivity)")
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
@@ -379,40 +418,45 @@ class BridgeEngine:
         key = ("insert", n_bucket, delta_cap, self.backend, None)
         fn = self._program(key, lambda: self._build_insert(n_bucket))
         cs, cd, cm, lab1, lab2 = fn(
-            live["src"], live["dst"], live["mask"], live["lab1"], live["lab2"],
+            *live["2ec"], live["lab1"], live["lab2"],
             recv.src, recv.dst, recv.mask,
         )
-        live.update(src=cs, dst=cd, mask=cm, lab1=lab1, lab2=lab2)
+        live.update({"2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2})
+        if live["sfs"] is not None:
+            skey = ("insert_sfs", n_bucket, delta_cap, self.backend, None)
+            sfn = self._program(
+                skey, lambda: self._build_insert_sfs(n_bucket))
+            live["sfs"] = tuple(sfn(*live["sfs"],
+                                    recv.src, recv.dst, recv.mask))
+        else:
+            hs, hd = live["host_edges"]
+            live["host_edges"] = (np.concatenate([hs, src]),
+                                  np.concatenate([hd, dst]))
         return self.current_analysis(kind=kind, final=final)
 
     def current_analysis(self, kind: str = "bridges", *,
                          final: str = "device"):
-        """Analysis of the live graph (final stage only; no certificate work).
-
-        Serves every 2-edge-connectivity kind — bridges, 2ecc, bridge_tree —
-        straight off the live certificate. kind='cuts' is refused: the
-        F1 ∪ F2 certificate provably does NOT preserve articulation points
-        (DESIGN.md §Connectivity), so vertex cuts must be recomputed on the
-        full edge set via ``analyze(..., kind='cuts')``.
+        """Analysis of the live graph (final stage only; no certificate
+        recomputation). Serves EVERY registry kind straight off the live
+        certificate the kind declares safe — 2-edge kinds from the Borůvka
+        pair, vertex-connectivity kinds (cuts, bcc) from the scan-first
+        pair (DESIGN.md §Analysis registry).
         """
-        kind = normalize_kind(kind)
+        analysis = get_analysis(kind)
+        kind = analysis.kind
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
-        if kind == "cuts":
-            raise NotImplementedError(
-                "the live state is a 2-edge certificate, which does not "
-                "preserve articulation points; run analyze(..., kind='cuts') "
-                "on the full edge set instead (DESIGN.md §Connectivity)")
         live = self._live
-        if final == "host" and kind == "bridges":
-            m = np.asarray(live["mask"])
-            return bridges_dfs(np.asarray(live["src"])[m],
-                               np.asarray(live["dst"])[m], live["n_nodes"])
+        cert = (self._materialize_sfs() if analysis.certificate == "sfs"
+                else live["2ec"])
+        if final == "host":
+            s, d, m = (np.asarray(x) for x in cert)
+            return analysis.host_fn(s[m], d[m], live["n_nodes"])
         key = ("final", kind, live["n_bucket"], self.backend, None)
         fn = self._program(
             key, lambda: self._build_final(live["n_bucket"], kind))
-        out = fn(live["src"], live["dst"], live["mask"])
-        return self._to_result(kind, out, live["n_nodes"])
+        out = fn(*cert)
+        return analysis.to_result(out, live["n_nodes"])
 
     def current_bridges(self, *, final: str = "device") -> set[tuple[int, int]]:
         """Bridges of the live graph (final stage only)."""
@@ -422,18 +466,21 @@ class BridgeEngine:
     def _machines(self) -> int:
         return math.prod(self.mesh.shape[a] for a in self.machine_axes)
 
-    def _build_distributed(self, n_nodes: int, final: str):
-        from repro.core.merge import build_distributed_bridges_fn
+    def _build_distributed(self, n_nodes: int, kind: str, final: str):
+        from repro.core.merge import build_distributed_analysis_fn
 
-        fn = build_distributed_bridges_fn(
-            self.mesh, self.machine_axes, n_nodes, self.schedule, final,
-            self.merge)
+        fn = build_distributed_analysis_fn(
+            self.mesh, self.machine_axes, n_nodes, schedule=self.schedule,
+            final=final, merge=self.merge, kind=kind)
         return jax.jit(fn)
 
-    def _find_bridges_distributed(self, src, dst, n_nodes: int, *,
-                                  final: str, seed: int):
+    def _analyze_distributed(self, src, dst, n_nodes: int, *, kind: str,
+                             final: str, seed: int):
         from repro.core.partition import partition_edges
 
+        analysis = get_analysis(kind)
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
         m = self._machines()
         psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m, seed=seed)
         shard_cap = self._bucket(psrc.shape[1])
@@ -442,20 +489,18 @@ class BridgeEngine:
             psrc = np.pad(psrc, ((0, 0), (0, pad)))
             pdst = np.pad(pdst, ((0, 0), (0, pad)))
             pmask = np.pad(pmask, ((0, 0), (0, pad)))
-        key = ("dist", n_nodes, shard_cap, self.backend, self.schedule,
+        key = ("dist", kind, n_nodes, shard_cap, self.backend, self.schedule,
                final, self.merge)
         fn = self._program(
-            key, lambda: self._build_distributed(n_nodes, final))
+            key, lambda: self._build_distributed(n_nodes, kind, final))
         with jax.set_mesh(self.mesh):
-            osrc, odst, omask = fn(
-                jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
+            out = fn(jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
         # machine 0 (paper) — or any machine under xor/hierarchical — answers
-        osrc = np.asarray(osrc)[0]
-        odst = np.asarray(odst)[0]
-        omask = np.asarray(omask)[0]
+        shard0 = jax.tree_util.tree_map(lambda x: np.asarray(x)[0], out)
         if final == "host":
-            return bridges_dfs(osrc[omask], odst[omask], n_nodes)
-        return _pairs(osrc, odst, omask)
+            s, d, mk = shard0
+            return analysis.host_fn(s[mk], d[mk], n_nodes)
+        return analysis.to_result(shard0, n_nodes)
 
 
 _DEFAULT_ENGINE: BridgeEngine | None = None

@@ -3,12 +3,15 @@
 Simulates heavy query traffic: a stream of independent queries with jittered
 graph sizes (all landing in one shape bucket) is grouped into batches of B
 and resolved one device dispatch per batch by the compile-once engine.
-``--analysis`` picks the query kind(s) — bridges, cuts (articulation
-points), 2ecc, bridge-tree, or ``all`` — and the driver reports per-kind
-queries/sec for cold (first batch pays the trace+compile), steady-state
-batched, and single-query serving, plus incremental updates for the
-2-edge-connectivity kinds. ``--json`` writes the per-kind rates and the
-engine's cache hit/miss/trace counters for dashboards.
+``--analysis`` picks the query kind(s) — any kind in the analysis registry
+(bridges, cuts, 2ecc, bridge-tree, bcc) or ``all`` — and the driver reports
+per-kind queries/sec for cold (first batch pays the trace+compile),
+steady-state batched, single-query, and incremental serving. Every kind is
+served on every substrate now (DESIGN.md §Analysis registry); the report
+carries each kind's substrate row — which certificate it merges over and
+whether single/batched/incremental/distributed serving applies — so
+dashboards can track the substrate matrix. ``--json`` writes the per-kind
+rates plus the engine's cache hit/miss/trace counters.
 
     PYTHONPATH=src python -m repro.launch.serve_bridges --smoke
     PYTHONPATH=src python -m repro.launch.serve_bridges \
@@ -23,27 +26,27 @@ import time
 
 import numpy as np
 
-from repro.connectivity.host import (
-    articulation_points_dfs,
-    bridge_tree_dfs,
-    two_ecc_labels_dfs,
-)
-from repro.core.bridges_host import bridges_dfs
+from repro.connectivity.registry import analysis_kinds, get_analysis
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
 
-KINDS = ("bridges", "cuts", "2ecc", "bridge-tree")
+#: CLI spellings: canonical kinds, with '-' aliases for the shell
+KINDS = tuple(k.replace("_", "-") for k in analysis_kinds())
 
-_HOST_REF = {
-    "bridges": bridges_dfs,
-    "cuts": articulation_points_dfs,
-    "2ecc": two_ecc_labels_dfs,
-    "bridge-tree": bridge_tree_dfs,
-}
 
-#: kinds servable incrementally off the live 2-edge certificate
-#: (cuts are not: the certificate does not preserve vertex cuts)
-_INCREMENTAL_KINDS = ("bridges", "2ecc", "bridge-tree")
+def substrates(kind: str) -> dict:
+    """The kind's row of the substrate matrix (DESIGN.md §Analysis
+    registry): every registry kind serves single/batched/distributed; the
+    incremental column and the certificate the merge schedules exchange
+    come from the descriptor."""
+    a = get_analysis(kind)
+    return {
+        "certificate": a.certificate,
+        "single": True,
+        "batched": True,
+        "incremental": a.incremental,
+        "distributed": True,
+    }
 
 
 def make_queries(num: int, n: int, edges: int, seed: int = 0):
@@ -61,14 +64,16 @@ def make_queries(num: int, n: int, edges: int, seed: int = 0):
 
 
 def _same(kind: str, got, want) -> bool:
-    if kind == "2ecc":
+    if get_analysis(kind).kind == "2ecc":
         return bool(np.array_equal(np.asarray(got), np.asarray(want)))
     return got == want
 
 
 def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
-    """Batched + single-query serving for one analysis kind."""
-    stats: dict = {"kind": kind}
+    """Batched + single + incremental serving for one analysis kind."""
+    analysis = get_analysis(kind)
+    host_ref = analysis.host_fn
+    stats: dict = {"kind": kind, "substrates": substrates(kind)}
 
     # ---- batched serving -------------------------------------------------
     t_cold = None
@@ -81,7 +86,7 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
             kind=kind)
         if args.verify:
             s, d, nq = chunk[0]
-            want = _HOST_REF[kind](s, d, nq)
+            want = host_ref(s, d, nq)
             assert _same(kind, got[0], want), f"{kind} batch@{start} mismatch"
         served += len(chunk)
         if t_cold is None:
@@ -109,8 +114,10 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
           f"{single_qps:.1f} queries/s", flush=True)
     stats["single"] = {"queries": len(queries), "qps": single_qps}
 
-    # ---- incremental serving ---------------------------------------------
-    if args.deltas > 0 and kind in _INCREMENTAL_KINDS:
+    # ---- incremental serving (every registry kind rides the live state:
+    # 2-edge kinds off the warm-start Borůvka pair, cuts/bcc off the live
+    # scan-first-search pair — DESIGN.md §Analysis registry) ---------------
+    if args.deltas > 0 and analysis.incremental:
         s0, d0, nq0 = queries[0]
         engine.load(s0, d0, nq0)
         all_s, all_d = s0, d0
@@ -123,7 +130,7 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
             all_d = np.concatenate([all_d, dd])
         dt = time.perf_counter() - t0
         if args.verify:
-            want = _HOST_REF[kind](all_s, all_d, nq0)
+            want = host_ref(all_s, all_d, nq0)
             assert _same(kind, got, want), f"{kind} incremental mismatch"
         ups = args.deltas / max(dt, 1e-9)
         print(f"[{kind:11s}] increment: {args.deltas} deltas x "
@@ -173,6 +180,12 @@ def main(argv=None):
     info = engine.cache_info()
     print(f"engine   : {info['programs']} programs, {info['hits']} hits, "
           f"{info['misses']} misses, {info['traces']} traces", flush=True)
+    for row in per_kind:
+        sub = row["substrates"]
+        print(f"substrate: {row['kind']:11s} cert={sub['certificate']} "
+              f"single={sub['single']} batched={sub['batched']} "
+              f"incremental={sub['incremental']} "
+              f"distributed={sub['distributed']}", flush=True)
     report = {"kinds": per_kind, "engine": info,
               "config": {"batch": args.batch, "queries": args.queries,
                          "n": args.n, "edges": args.edges}}

@@ -18,6 +18,10 @@ if settings is not None:
     settings.load_profile("repro")
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

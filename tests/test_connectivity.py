@@ -1,7 +1,8 @@
-"""Connectivity subsystem (DESIGN.md §Connectivity): device articulation
-points / 2ECC labels / bridge tree vs the host Tarjan references and
-networkx, planted failure scenarios, and the engine query kinds
-(compile-once no-retrace, batched dispatch, incremental updates)."""
+"""Connectivity subsystem (DESIGN.md §Connectivity, §Analysis registry):
+device articulation points / 2ECC labels / bridge tree / bcc blocks vs the
+host Tarjan references and networkx, planted failure scenarios, and the
+registry-dispatched engine query kinds (compile-once no-retrace, batched
+dispatch, incremental updates incl. the vertex-connectivity kinds)."""
 import networkx as nx
 import numpy as np
 import pytest
@@ -11,8 +12,11 @@ from helpers import bucketed_graph, to_graph, to_pair_set
 from repro.connectivity import (
     articulation_points,
     articulation_points_dfs,
+    bcc_blocks,
     bridge_tree,
     bridge_tree_dfs,
+    get_analysis,
+    host_bcc_labels,
     two_ecc_labels,
     two_ecc_labels_dfs,
 )
@@ -29,7 +33,7 @@ N_A, N_B, E_N = 50, 60, 400
 # assert on counter DELTAS, never absolute values.
 ENGINE = BridgeEngine()
 
-DEVICE_KINDS = ("cuts", "2ecc", "bridge_tree")
+DEVICE_KINDS = ("cuts", "2ecc", "bridge_tree", "bcc")
 
 
 def graph(seed, n=N_A, e=E_N):
@@ -37,11 +41,7 @@ def graph(seed, n=N_A, e=E_N):
 
 
 def host_ref(kind, src, dst, n):
-    if kind == "cuts":
-        return articulation_points_dfs(src, dst, n)
-    if kind == "2ecc":
-        return two_ecc_labels_dfs(src, dst, n)
-    return bridge_tree_dfs(src, dst, n)
+    return get_analysis(kind).host_fn(src, dst, n)
 
 
 def assert_same(kind, got, want):
@@ -49,6 +49,10 @@ def assert_same(kind, got, want):
         assert np.array_equal(np.asarray(got), np.asarray(want))
     else:
         assert got == want
+
+
+def nx_blocks(src, dst, n):
+    return set(map(frozenset, nx.biconnected_components(to_graph(src, dst, n))))
 
 
 def nx_cuts(src, dst, n):
@@ -60,6 +64,24 @@ def test_host_cuts_match_networkx():
     for seed in range(6):
         src, dst, n, _ = bucketed_graph(seed)
         assert articulation_points_dfs(src, dst, n) == nx_cuts(src, dst, n)
+
+
+def test_host_bcc_matches_networkx():
+    """Satellite: iterative host Tarjan BCC vs networkx blocks."""
+    for seed in range(6):
+        src, dst, n, _ = bucketed_graph(seed, simple=(seed % 2 == 0))
+        assert host_bcc_labels(src, dst, n) == nx_blocks(src, dst, n)
+
+
+def test_host_bcc_structure():
+    # path: every edge its own block; cycle: one block; bridge: 2-block
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3], np.int32)
+    assert host_bcc_labels(src, dst, 4) == {
+        frozenset({0, 1}), frozenset({1, 2}), frozenset({2, 3})}
+    cyc_s = np.array([0, 1, 2, 3], np.int32)
+    cyc_d = np.array([1, 2, 3, 0], np.int32)
+    assert host_bcc_labels(cyc_s, cyc_d, 4) == {frozenset({0, 1, 2, 3})}
 
 
 def test_host_two_ecc_is_bridge_contraction():
@@ -82,6 +104,7 @@ def test_device_matches_host_on_random_graphs():
         s, d = bridge_tree(el).to_numpy()
         got = set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
         assert got == bridge_tree_dfs(src, dst, n)
+        assert bcc_blocks(el) == host_bcc_labels(src, dst, n)
 
 
 def test_device_handles_multigraphs_and_self_loops():
@@ -90,6 +113,7 @@ def test_device_handles_multigraphs_and_self_loops():
         assert articulation_points(el) == articulation_points_dfs(src, dst, n)
         assert np.array_equal(np.asarray(two_ecc_labels(el))[:n],
                               two_ecc_labels_dfs(src, dst, n))
+        assert bcc_blocks(el) == host_bcc_labels(src, dst, n)
 
 
 def test_path_graph_everything_fails():
@@ -101,6 +125,8 @@ def test_path_graph_everything_fails():
     labels = np.asarray(two_ecc_labels(el))[:n]
     assert np.array_equal(labels, np.arange(n))  # every vertex its own 2ECC
     assert len(to_pair_set(bridge_tree(el))) == n - 1
+    # every path edge is its own 2-vertex block
+    assert bcc_blocks(el) == {frozenset({i, i + 1}) for i in range(n - 1)}
 
 
 def test_cycle_graph_nothing_fails():
@@ -111,6 +137,7 @@ def test_cycle_graph_nothing_fails():
     assert articulation_points(el) == set()
     assert len(np.unique(np.asarray(two_ecc_labels(el))[:n])) == 1
     assert to_pair_set(bridge_tree(el)) == set()
+    assert bcc_blocks(el) == {frozenset(range(n))}  # one block
 
 
 def test_shared_vertex_cut_without_any_bridge():
@@ -121,25 +148,67 @@ def test_shared_vertex_cut_without_any_bridge():
     assert bridges_dfs(src, dst, 5) == set()
     assert articulation_points(el) == {0}
     assert len(np.unique(np.asarray(two_ecc_labels(el))[:5])) == 1
+    # the cut vertex sits in both blocks
+    assert bcc_blocks(el) == {frozenset({0, 1, 2}), frozenset({0, 3, 4})}
 
 
-def test_certificate_counterexample_graph_has_no_cuts():
-    """The graph proving F1 ∪ F2 certificates don't preserve vertex cuts
-    (DESIGN.md §Connectivity): triangles {1,2,3}, {4,5,6}, hub 0 joined to
-    all six, cross edges i<->i+3. The full graph is 2-vertex-connected, yet
-    an adversarial forest pair drops every cross edge and leaves the hub a
-    cut vertex of the certificate. Cuts must therefore be computed on the
-    full buffer — which is what the device path does."""
+def counterexample_graph():
+    """The graph proving arbitrary-forest F1 ∪ F2 certificates don't
+    preserve vertex cuts (DESIGN.md §Connectivity): triangles {1,2,3},
+    {4,5,6}, hub 0 joined to all six, cross edges i<->i+3. The full graph
+    is 2-vertex-connected, yet an adversarial forest pair drops every
+    cross edge and leaves the hub a cut vertex of the certificate."""
     tri_a = [(1, 2), (2, 3), (1, 3)]
     tri_b = [(4, 5), (5, 6), (4, 6)]
     hub = [(0, v) for v in range(1, 7)]
     cross = [(1, 4), (2, 5), (3, 6)]
     src = np.array([u for u, _ in tri_a + tri_b + hub + cross], np.int32)
     dst = np.array([v for _, v in tri_a + tri_b + hub + cross], np.int32)
-    el = EdgeList.from_arrays(src, dst, 7)
-    assert nx_cuts(src, dst, 7) == set()
+    return src, dst, 7
+
+
+def test_certificate_counterexample_graph_has_no_cuts():
+    src, dst, n = counterexample_graph()
+    el = EdgeList.from_arrays(src, dst, n)
+    assert nx_cuts(src, dst, n) == set()
     assert articulation_points(el) == set()
-    assert articulation_points_dfs(src, dst, 7) == set()
+    assert articulation_points_dfs(src, dst, n) == set()
+    assert bcc_blocks(el) == {frozenset(range(n))}  # one block
+
+
+def test_counterexample_two_edge_certificate_is_genuinely_unsafe():
+    """Regression pinning WHY the old incremental path refused cuts: the
+    adversarial Borůvka-legal forest pair from DESIGN.md §Connectivity is a
+    valid 2-edge certificate of the counterexample graph, yet computing
+    articulation points ON it yields a wrong answer (the hub becomes a cut
+    vertex). The SFS certificate of the same graph stays cut-correct —
+    that asymmetry is the whole reason the live state now carries the
+    scan-first-search pair."""
+    from repro.core.certificate import sfs_certificate
+
+    src, dst, n = counterexample_graph()
+    # F1 = {12, 23, 01, 04, 45, 56}, F2 = {13, 02, 03, 05, 06, 46}: each
+    # a spanning forest, and F2 is maximal in G − F1 (every cross edge
+    # closes an F2 cycle through the hub, so maximality never forces one in)
+    f1 = [(1, 2), (2, 3), (0, 1), (0, 4), (4, 5), (5, 6)]
+    f2 = [(1, 3), (0, 2), (0, 3), (0, 5), (0, 6), (4, 6)]
+    cs = np.array([u for u, _ in f1 + f2], np.int32)
+    cd = np.array([v for _, v in f1 + f2], np.int32)
+    G = to_graph(src, dst, n)
+    S = to_graph(cs, cd, n)
+    assert nx.is_forest(to_graph([u for u, _ in f1], [v for _, v in f1], n))
+    assert nx.is_forest(to_graph([u for u, _ in f2], [v for _, v in f2], n))
+    # a genuine 2-edge certificate: same bridge structure...
+    assert bridges_dfs(cs, cd, n) == bridges_dfs(src, dst, n) == set()
+    # ...but the WRONG vertex cuts: the hub is a cut vertex of S only
+    assert set(nx.articulation_points(G)) == set()
+    assert set(nx.articulation_points(S)) == {0}
+    assert articulation_points_dfs(cs, cd, n) == {0}
+    # the scan-first-search certificate preserves the (empty) cut set
+    scert = sfs_certificate(EdgeList.from_arrays(src, dst, n))
+    ss, sd = scert.to_numpy()
+    assert articulation_points_dfs(ss, sd, n) == set()
+    assert host_bcc_labels(ss, sd, n) == host_bcc_labels(src, dst, n)
 
 
 # --------------------------------------------------------- planted scenarios
@@ -156,6 +225,10 @@ def test_planted_scenarios_match_ground_truth(sc):
     assert len(np.unique(labels)) == sc["n_2ecc"]
     # bridge tree has one edge per bridge, over 2ECC supernodes
     assert len(to_pair_set(bridge_tree(el))) == len(sc["bridges"])
+    # every planted bridge is its own 2-vertex block
+    blocks = bcc_blocks(el)
+    assert blocks == host_bcc_labels(src, dst, n)
+    assert all(frozenset(b) in blocks for b in sc["bridges"])
 
 
 # ------------------------------------------------------- hypothesis property
@@ -173,6 +246,15 @@ def test_prop_bridge_tree_matches_host(seed):
     s, d = bridge_tree(el).to_numpy()
     got = set((int(min(a, b)), int(max(a, b))) for a, b in zip(s, d))
     assert got == bridge_tree_dfs(src, dst, n)
+
+
+@given(st.integers(0, 10_000))
+def test_prop_device_bcc_matches_host_and_networkx(seed):
+    src, dst, n, el = bucketed_graph(seed, simple=(seed % 3 != 0))
+    want = host_bcc_labels(src, dst, n)
+    assert bcc_blocks(el) == want
+    if seed % 3 != 0:  # networkx blocks defined on simple graphs
+        assert want == nx_blocks(src, dst, n)
 
 
 # ------------------------------------------------------------- engine kinds
@@ -220,10 +302,14 @@ def test_engine_convenience_methods_match_analyze():
                           ENGINE.analyze(src, dst, N_A, kind="2ecc"))
     assert ENGINE.find_bridge_tree(src, dst, N_A) == \
         ENGINE.analyze(src, dst, N_A, kind="bridge-tree")  # alias accepted
+    assert ENGINE.find_bcc(src, dst, N_A) == \
+        ENGINE.analyze(src, dst, N_A, kind="blocks")  # alias accepted
 
 
-def test_engine_incremental_serves_two_ecc_and_bridge_tree():
-    """Acceptance: insert_edges answers every certificate-safe kind."""
+def test_engine_incremental_serves_every_kind():
+    """Acceptance: insert_edges answers EVERY registry kind — the 2-edge
+    kinds off the warm-start Borůvka pair, cuts/bcc off the live
+    scan-first-search pair."""
     src, dst, _ = gen.planted_bridge_graph(N_A, E_N, n_bridges=3, seed=7)
     ENGINE.load(src, dst, N_A)
     all_s, all_d = src, dst
@@ -237,15 +323,62 @@ def test_engine_incremental_serves_two_ecc_and_bridge_tree():
         bridge_tree_dfs(all_s, all_d, N_A)
     assert ENGINE.current_analysis("bridges") == \
         bridges_dfs(all_s, all_d, N_A)
+    assert ENGINE.current_analysis("cuts") == \
+        articulation_points_dfs(all_s, all_d, N_A)
+    assert ENGINE.current_analysis("bcc") == \
+        host_bcc_labels(all_s, all_d, N_A)
 
 
-def test_engine_incremental_cuts_refused():
-    src, dst = graph(8)
+def test_engine_incremental_cuts_on_counterexample_graph():
+    """Acceptance regression (DESIGN.md §Connectivity): the graph whose
+    2-edge certificate provably mis-reports the hub as a cut vertex. The
+    incremental path must answer cuts correctly — it serves them from the
+    live scan-first-search pair, not the 2-edge pair."""
+    src, dst, n = counterexample_graph()
+    ENGINE.load(src, dst, n)
+    assert ENGINE.current_analysis("cuts") == set()
+    assert ENGINE.current_analysis("bcc") == {frozenset(range(n))}
+    # drop-in delta: cutting the graph open at the hub IS visible live.
+    # (adding edges can only be tested additively: plant a NEW pendant
+    # vertex whose attach point becomes a cut vertex)
+    got = ENGINE.insert_edges(np.array([1], np.int32),
+                              np.array([7], np.int32), kind="cuts")
+    assert got == {1}  # vertex 7 hangs off 1 by a single link
+    assert ENGINE.current_analysis("bridges") == {(1, 7)}
+
+
+def test_engine_incremental_cuts_random_deltas():
+    """insert_edges(kind='cuts') tracks the host oracle over a delta chain
+    (the PR 2 restriction this PR lifts)."""
+    src, dst = graph(11)
     ENGINE.load(src, dst, N_A)
-    with pytest.raises(NotImplementedError, match="certificate"):
-        ENGINE.current_analysis("cuts")
-    with pytest.raises(NotImplementedError, match="certificate"):
-        ENGINE.insert_edges([0], [1], kind="cuts")
+    all_s, all_d = src, dst
+    for step in range(3):
+        ds, dd = gen.random_graph(N_A, 25, seed=300 + step)
+        got = ENGINE.insert_edges(ds, dd, kind="cuts")
+        all_s = np.concatenate([all_s, ds])
+        all_d = np.concatenate([all_d, dd])
+        assert got == articulation_points_dfs(all_s, all_d, N_A), step
+
+
+def test_engine_registry_dispatch_no_new_traces_per_kind():
+    """Acceptance: the registry dispatch introduces no extra traces — per
+    kind, a second same-bucket call (single, batched, AND incremental
+    final) is trace-free."""
+    s1, d1 = graph(21)
+    s2, d2 = graph(22, N_B)
+    for kind in ("bridges",) + DEVICE_KINDS:
+        ENGINE.analyze(s1, d1, N_A, kind=kind)
+        ENGINE.analyze_batch([(s1, d1)], N_A, kind=kind)
+        ENGINE.load(s1, d1, N_A)
+        ENGINE.current_analysis(kind)
+        traces = ENGINE.stats.traces
+        ENGINE.analyze(s2, d2, N_B, kind=kind)
+        ENGINE.analyze_batch([(s2, d2)], N_B, kind=kind)
+        ENGINE.load(s2, d2, N_B)
+        ENGINE.current_analysis(kind)
+        assert ENGINE.stats.traces == traces, \
+            f"{kind} retraced through the registry dispatch"
 
 
 def test_engine_rejects_unknown_kind():

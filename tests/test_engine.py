@@ -133,6 +133,34 @@ def test_insert_requires_load():
         eng.insert_edges([0], [1])
 
 
+def test_registry_out_struct_matches_traced_shapes():
+    """Each Analysis.out_struct declaration is exactly the pytree of
+    shapes/dtypes the traced final stage produces (the §Buffers contract
+    extended to result buffers)."""
+    import jax
+
+    from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
+    from repro.core.certificate import certificate_capacity
+    from repro.engine import make_analysis_fn
+
+    n, cap = 64, 256
+    cert_cap = certificate_capacity(n)
+    in_structs = (jax.ShapeDtypeStruct((cap,), np.int32),
+                  jax.ShapeDtypeStruct((cap,), np.int32),
+                  jax.ShapeDtypeStruct((cap,), np.bool_))
+    for kind in ANALYSIS_KINDS:
+        analysis = get_analysis(kind)
+        got = jax.eval_shape(make_analysis_fn(n, kind, "device"), *in_structs)
+        # out_struct's capacity = the buffer the final stage ran on
+        ran_on = cert_cap if analysis.device_input == "certificate" else cap
+        want = analysis.out_struct(n, ran_on)
+        got_l = jax.tree_util.tree_leaves(got)
+        want_l = jax.tree_util.tree_leaves(want)
+        assert len(got_l) == len(want_l), kind
+        for g, w in zip(got_l, want_l):
+            assert g.shape == w.shape and g.dtype == w.dtype, (kind, g, w)
+
+
 def test_batched_edgelist_roundtrip():
     graphs = [graph(11), graph(12)]
     bel = BatchedEdgeList.from_graphs(graphs, N_A, capacity=512, batch_pad=4)

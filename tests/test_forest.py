@@ -1,9 +1,16 @@
-"""Spanning-forest properties: acyclic, component-spanning, label-correct."""
+"""Spanning-forest properties: acyclic, component-spanning, label-correct —
+for both the Borůvka hooking forest and the scan-first-search (BFS-layer)
+frontier-hooking primitive."""
 import networkx as nx
 import numpy as np
 from _hyp import given, st
 
-from repro.core.forest import connected_components, spanning_forest
+from repro.core.forest import (
+    connected_components,
+    scan_first_forest,
+    scan_first_forest_ex,
+    spanning_forest,
+)
 from repro.graph import generators as gen
 from repro.graph.datastructs import EdgeList
 
@@ -60,6 +67,101 @@ def test_connected_components_matches_networkx():
     G = to_graph(src, dst, 70)
     for comp in nx.connected_components(G):
         assert len({int(labels[v]) for v in comp}) == 1
+
+
+# ----------------------------------------- scan-first search (BFS layers)
+def check_sfs(src, dst, n, el):
+    """The frontier-hooking invariants: a genuine BFS-layer forest."""
+    fmask, parent, level = scan_first_forest(el)
+    fmask = np.asarray(fmask) & np.asarray(el.mask)
+    parent, level = np.asarray(parent), np.asarray(level)
+    G = to_graph(src, dst, n)
+    G.remove_edges_from(nx.selfloop_edges(G))
+
+    # the forest is a forest and spans exactly G's components
+    fs = np.asarray(el.src)[fmask]
+    fd = np.asarray(el.dst)[fmask]
+    F = to_graph(fs, fd, n)
+    assert nx.is_forest(F)
+    assert nx.number_connected_components(F) == nx.number_connected_components(G)
+
+    # BFS-layer invariant: every tree edge joins adjacent layers,
+    # parent level = child level - 1, and levels are true BFS distances
+    # from the component's min-id root
+    for comp in nx.connected_components(G):
+        r = min(comp)
+        dist = nx.single_source_shortest_path_length(G, r)
+        for v in comp:
+            assert level[v] == dist[v], (v, level[v], dist[v])
+            if v != r:
+                assert level[parent[v]] == level[v] - 1
+                assert G.has_edge(int(parent[v]), int(v))
+    for u, w in zip(fs.tolist(), fd.tolist()):
+        assert abs(int(level[u]) - int(level[w])) == 1
+
+
+@given(st.integers(0, 10_000))
+def test_sfs_layer_invariant_random(seed):
+    src, dst, n, el = bucketed_graph(seed)
+    check_sfs(src, dst, n, el)
+
+
+@given(st.integers(0, 10_000))
+def test_sfs_multigraph_selfloops(seed):
+    src, dst, n, el = bucketed_graph(seed, simple=False)
+    check_sfs(src, dst, n, el)
+
+
+@given(st.integers(0, 10_000))
+def test_sfs_labels_equal_boruvka_components(seed):
+    """The SFS root labels induce exactly the Borůvka hooking partition
+    (canonicalized to min member id)."""
+    src, dst, n, el = bucketed_graph(seed, simple=(seed % 2 == 0))
+    _, _, _, root, _ = scan_first_forest_ex(el)
+    root = np.asarray(root)
+    labels = np.asarray(connected_components(el))
+    # same partition...
+    vs = np.arange(n)
+    canon = np.array([vs[labels == labels[v]].min() for v in range(n)])
+    assert np.array_equal(root, canon)
+
+
+def test_sfs_on_failure_scenarios():
+    """Planted scenarios: BFS layers + component labels on ground truth."""
+    for sc in gen.failure_scenarios():
+        src, dst, n = sc["src"], sc["dst"], sc["n"]
+        el = EdgeList.from_arrays(src, dst, n)
+        check_sfs(src, dst, n, el)
+        _, _, _, root, _ = scan_first_forest_ex(el)
+        root = np.asarray(root)
+        labels = np.asarray(connected_components(el))
+        G = to_graph(src, dst, n)
+        for comp in nx.connected_components(G):
+            assert len({int(root[v]) for v in comp}) == 1
+            assert int(root[min(comp)]) == min(comp)
+        assert len(set(root.tolist())) == len(set(labels.tolist()))
+
+
+def test_sfs_isolated_and_masked():
+    el = EdgeList(
+        np.zeros(4, np.int32), np.zeros(4, np.int32), np.zeros(4, bool), 5
+    )
+    fmask, parent, level = scan_first_forest(el)
+    assert not np.asarray(fmask).any()
+    assert np.array_equal(np.asarray(parent), np.arange(5))
+    assert np.array_equal(np.asarray(level), np.zeros(5))  # all roots
+
+
+def test_sfs_path_graph_levels():
+    """A path rooted at 0 must produce levels 0..n-1 (depth = diameter)."""
+    n = 12
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    el = EdgeList.from_arrays(src, dst, n)
+    fmask, parent, level = scan_first_forest(el)
+    assert bool(np.asarray(fmask).all())
+    assert np.array_equal(np.asarray(level), np.arange(n))
+    assert np.array_equal(np.asarray(parent)[1:], np.arange(n - 1))
 
 
 @given(st.integers(0, 10_000))

@@ -1,83 +1,44 @@
 """Merge-schedule equivalence: ``paper``, ``xor``, and ``hierarchical`` must
-produce identical bridge sets.
+produce identical results — for EVERY analysis-registry kind, not just
+bridges.
 
-Certificate union is associative, commutative, and idempotent, so every
-schedule computes the same final certificate. The simulator below drives the
-REAL phase-permutation logic (``merge._phase_perm``) and the real merge step
-(``merge_certificates``) machine-by-machine on host — no collectives — so the
+Certificate union is associative, commutative, and idempotent (for both the
+2-edge Borůvka pair and the scan-first-search pair), so every schedule
+computes an equivalent final certificate. ``core.merge.simulate_merge_host``
+drives the REAL phase-permutation logic (``merge._phase_perm``) and the real
+per-phase certify step machine-by-machine on host — no collectives — so the
 equivalence property is testable in a single-device environment. The
 end-to-end shard_map version runs too when this jax build supports it.
 """
-import math
-
 import numpy as np
 import pytest
 
-from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
-from repro.core.certificate import (
-    certificate_capacity,
-    merge_certificates,
-    sparse_certificate,
-)
-from repro.core.merge import _phase_perm
+import jax
+
+from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
+from repro.core.bridges_host import bridges_from_edgelist
+from repro.core.certificate import CERTIFICATE_BUILDERS, certificate_capacity
+from repro.core.merge import simulate_merge_host
 from repro.core.partition import partition_edges
+from repro.engine import BridgeEngine, make_analysis_fn
 from repro.graph import generators as gen
-from repro.graph.datastructs import EdgeList, pad_edges
+from repro.graph.datastructs import EdgeList
 
-from helpers import nx_bridges
+from helpers import nx_bridges, requires_modern_sharding
 
+M, GRID = 8, (2, 4)
 
-def _empty_cert(n):
-    """All-masked-off buffer: what ppermute non-receivers see (a no-op union)."""
-    cap = certificate_capacity(n)
-    import jax.numpy as jnp
-
-    return EdgeList(jnp.zeros(cap, jnp.int32), jnp.zeros(cap, jnp.int32),
-                    jnp.zeros(cap, bool), n)
+# one engine so the single-device reference programs compile once
+ENGINE = BridgeEngine()
 
 
-def _local_certs(src, dst, n, m, seed=0):
-    psrc, pdst, pmask = partition_edges(src, dst, n, m, seed=seed)
+def _local_certs(src, dst, n, certify, seed=0):
+    psrc, pdst, pmask = partition_edges(src, dst, n, M, seed=seed)
     cap = certificate_capacity(n)
     return [
-        sparse_certificate(
-            EdgeList(psrc[i], pdst[i], pmask[i], n), capacity=cap)
-        for i in range(m)
+        certify(EdgeList(psrc[i], pdst[i], pmask[i], n), capacity=cap)
+        for i in range(M)
     ]
-
-
-def _run_phases(certs, schedule, m):
-    """One flattened-axis schedule, mirroring merge._merge_phases_one_axis."""
-    phases = max(int(math.ceil(math.log2(m))), 0)
-    n = certs[0].n_nodes
-    for q in range(phases):
-        perm = _phase_perm(schedule, m, q)
-        recv = {d: certs[s] for (s, d) in perm}
-        certs = [
-            merge_certificates(certs[i], recv[i]) if i in recv
-            else merge_certificates(certs[i], _empty_cert(n))
-            for i in range(m)
-        ]
-    return certs
-
-
-def _simulate(schedule, src, dst, n, m=8, axes=(2, 4)):
-    """Host simulation of the distributed pipeline for one schedule."""
-    certs = _local_certs(src, dst, n, m)
-    if schedule in ("paper", "xor"):
-        return _run_phases(certs, schedule, m)
-    assert schedule == "hierarchical"
-    # machines laid out on an (axes[0], axes[1]) grid, fastest axis last:
-    # xor-merge within each row first, then xor-merge within each column.
-    a0, a1 = axes
-    assert a0 * a1 == m
-    grid = [certs[r * a1:(r + 1) * a1] for r in range(a0)]
-    grid = [_run_phases(row, "xor", a1) for row in grid]
-    for c in range(a1):
-        col = _run_phases([grid[r][c] for r in range(a0)], "xor", a0)
-        for r in range(a0):
-            grid[r][c] = col[r]
-    return [cert for row in grid for cert in row]
 
 
 CASES = [
@@ -90,9 +51,12 @@ CASES = [
 def test_three_schedules_identical_bridges(name, make):
     src, dst, n = make()
     want = nx_bridges(src, dst, n)
+    certify = CERTIFICATE_BUILDERS["2ec"]
     results = {}
     for schedule in ("paper", "xor", "hierarchical"):
-        certs = _simulate(schedule, src, dst, n)
+        certs = simulate_merge_host(
+            _local_certs(src, dst, n, certify), schedule, certify=certify,
+            grid=GRID)
         # paper: machine 0 answers; xor/hierarchical: every machine answers
         answer_on = [0] if schedule == "paper" else range(len(certs))
         got = {i: bridges_from_edgelist(certs[i]) for i in answer_on}
@@ -101,18 +65,41 @@ def test_three_schedules_identical_bridges(name, make):
     assert results["paper"] == results["xor"] == results["hierarchical"]
 
 
-def _supports_shard_map() -> bool:
-    import jax
+@pytest.mark.parametrize("kind", ANALYSIS_KINDS)
+def test_distributed_kind_matches_single_device_all_schedules(kind):
+    """Acceptance: for every registry kind, the distributed path (the
+    kind's certificate type merged by the host-simulated schedules, then
+    the kind's device final stage at the answering machine) produces
+    results identical to the single-device engine path, under all three
+    merge schedules."""
+    analysis = get_analysis(kind)
+    certify = CERTIFICATE_BUILDERS[analysis.certificate]
+    src, dst, n = CASES[0][1]()
+    want = ENGINE.analyze(src, dst, n, kind=kind)
+    final_fn = jax.jit(make_analysis_fn(n, kind, "device"))
+    for schedule in ("paper", "xor", "hierarchical"):
+        certs = simulate_merge_host(
+            _local_certs(src, dst, n, certify), schedule, certify=certify,
+            grid=GRID)
+        answer_on = [0] if schedule == "paper" else [0, M - 1]
+        for i in answer_on:
+            c = certs[i]
+            got = analysis.to_result(final_fn(c.src, c.dst, c.mask), n)
+            if analysis.kind == "2ecc":
+                assert np.array_equal(got, want), (kind, schedule, i)
+            else:
+                assert got == want, (kind, schedule, i)
+        # final='host' substrate: the kind's sequential reference on the
+        # answering machine's merged certificate
+        s, d = certs[0].to_numpy()
+        host_got = analysis.host_fn(s, d, n)
+        if analysis.kind == "2ecc":
+            assert np.array_equal(host_got, want), (kind, schedule)
+        else:
+            assert host_got == want, (kind, schedule)
 
-    try:
-        from jax.sharding import AxisType  # noqa: F401
-    except ImportError:
-        return False
-    return hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")
 
-
-@pytest.mark.skipif(not _supports_shard_map(),
-                    reason="this jax build lacks shard_map/set_mesh/AxisType")
+@requires_modern_sharding
 def test_three_schedules_end_to_end_shard_map():
     """Full collective pipeline (subprocess with 8 forced host devices)."""
     import os
@@ -126,12 +113,15 @@ def test_three_schedules_end_to_end_shard_map():
     env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
     r = subprocess.run(
         [sys.executable, "-c", textwrap.dedent("""
+            import numpy as np
             import jax
             from jax.sharding import AxisType
             mesh = jax.make_mesh((2, 4), ("data", "model"),
                                  axis_types=(AxisType.Auto,) * 2)
             from repro.core import find_bridges
             from repro.core.bridges_host import bridges_dfs
+            from repro.engine import BridgeEngine
+            from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
             from repro.graph import generators as gen
             for name, (src, dst, n) in {
                 "planted": gen.planted_bridge_graph(96, 2000, 4, seed=5)[:2] + (96,),
@@ -143,6 +133,17 @@ def test_three_schedules_end_to_end_shard_map():
                                        schedule=s, final="device", seed=1)
                        for s in ("paper", "xor", "hierarchical")}
                 assert got["paper"] == got["xor"] == got["hierarchical"] == want, name
+            # every registry kind through the distributed engine path
+            eng_single = BridgeEngine()
+            eng = BridgeEngine(mesh=mesh, machine_axes=("data", "model"),
+                              schedule="xor")
+            src, dst, n = gen.planted_bridge_graph(96, 2000, 4, seed=5)[:2] + (96,)
+            for kind in ANALYSIS_KINDS:
+                want = eng_single.analyze(src, dst, n, kind=kind)
+                got = eng.analyze(src, dst, n, kind=kind, seed=1)
+                same = (np.array_equal(got, want)
+                        if get_analysis(kind).kind == "2ecc" else got == want)
+                assert same, kind
             print("OK")
         """)],
         capture_output=True, text=True, env=env, timeout=600,
