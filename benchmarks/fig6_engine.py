@@ -10,10 +10,19 @@ graphs whose sizes land in one power-of-two shape bucket):
                    reported per query.
   * incremental  — an edge delta folded into the live certificate by the
                    warm-start merge + final stage only; reported per update.
+  * decremental  — a batch of link failures tombstoned out of the live
+                   buffer; certificate untouched unless a certificate edge
+                   died (DESIGN.md §Decremental); reported per update.
 
 This is the amortization story the engine exists for: compile cost is paid
 once per bucket, dispatch cost once per batch, certificate cost once per
 live graph.
+
+The closing ``fig6/engine_cache`` record pins the program-cache counters
+(programs/misses/traces) for this fixed operating sequence — they are
+deterministic, so ``scripts/check_bench.py`` compares them EXACTLY against
+``BENCH_baseline.json`` and a compile-cache regression (an unexpected
+retrace) fails CI.
 """
 from __future__ import annotations
 
@@ -26,7 +35,9 @@ from repro.graph import generators as gen
 
 def run(out, smoke: bool = False):
     v, e, b = (96, 800, 4) if smoke else (192, 3000, 8)
-    n_deltas = 64
+    # sized so the insert phase never outgrows the full-buffer bucket: the
+    # timed sequence stays same-bucket churn (the no-retrace serving case)
+    n_deltas = 48
 
     def query(seed):
         n = v - (seed % 7)  # jitter inside the bucket
@@ -64,11 +75,31 @@ def run(out, smoke: bool = False):
     # Each timed call gets a FRESH delta: re-inserting the same edges is a
     # no-op for the warm-start merge and would flatter the number.
     engine.load(s0, d0, n0)
-    deltas = iter(gen.random_graph(n0, n_deltas, seed=99 + k)
-                  for k in range(32))
+    delta_list = [gen.random_graph(n0, n_deltas, seed=99 + k)
+                  for k in range(8)]
+    deltas = iter(delta_list)
     t_inc = timeit(lambda: engine.insert_edges(*next(deltas)))
     out.append(csv_row(
         "fig6/incremental_update", t_inc,
         f"delta={n_deltas} speedup_vs_full={t_cached / max(t_inc, 1e-9):.1f}x "
         f"cert_edges={engine.num_live_edges}"))
+
+    # decremental: fail a batch of just-inserted links per timed call. Random
+    # edges of a dense graph are rarely certificate edges, so the common case
+    # is the tombstone-only path; the derived column records how many of the
+    # timed deletions did force a certificate rebuild.
+    n_keys = 16
+    dels = iter((s[:n_keys], d[:n_keys]) for s, d in delta_list)
+    t_del = timeit(lambda: engine.delete_edges(*next(dels)))
+    out.append(csv_row(
+        "fig6/decremental_update", t_del,
+        f"keys={n_keys} rebuilds={sum(engine.live_rebuilds.values())} "
+        f"speedup_vs_full={t_cached / max(t_del, 1e-9):.1f}x"))
+
+    # pinned compile-once counters for the whole fixed sequence above
+    info = engine.cache_info()
+    out.append(csv_row(
+        "fig6/engine_cache", 0.0,
+        f"programs={info['programs']} misses={info['misses']} "
+        f"traces={info['traces']}"))
     return out

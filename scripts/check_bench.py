@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""CI bench-regression gate: compare a smoke-bench JSON against the
+committed baseline (``BENCH_baseline.json``).
+
+Two classes of checks, by design very different in strictness:
+
+* **Counters are exact.** Records may pin program-cache counters in their
+  ``derived`` column as ``key=value`` tokens (e.g. ``fig6/engine_cache``'s
+  ``programs=.. misses=.. traces=..``). These are deterministic for a fixed
+  operating sequence — a mismatch means the compile-once contract changed
+  (a retrace snuck into the serving path, a program key split or merged),
+  which is precisely the perf regression CI must catch even though wall
+  times on shared runners are too noisy to gate on.
+
+* **Timings are generous.** ``us_per_call`` may drift with runner hardware;
+  a record only fails when it is more than ``--tolerance`` times SLOWER
+  than baseline (speedups never fail). The default is deliberately loose —
+  this is a tripwire for order-of-magnitude path regressions (e.g. a cache
+  miss per query), not a microbenchmark gate.
+
+The record-name SETS must also match exactly, so silently dropped bench
+coverage fails the build.
+
+    python scripts/check_bench.py --baseline BENCH_baseline.json \
+        --current BENCH_ci_smoke.json [--tolerance 50]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+#: derived-column counter keys pinned exactly (deterministic by design)
+EXACT_KEYS = ("programs", "misses", "traces")
+
+_TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
+
+
+def parse_counters(derived: str) -> dict[str, int]:
+    """``key=value`` integer tokens of a derived column (floats like
+    ``speedup_vs_full=12.3x`` are ignored — only bare integers count)."""
+    return {k: int(v) for k, v in _TOKEN.findall(derived or "")}
+
+
+def compare(baseline: list[dict], current: list[dict],
+            tolerance: float) -> list[str]:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    failures: list[str] = []
+    base = {r["name"]: r for r in baseline}
+    cur = {r["name"]: r for r in current}
+    if missing := sorted(set(base) - set(cur)):
+        failures.append(f"records missing from current run: {missing}")
+    if extra := sorted(set(cur) - set(base)):
+        failures.append(
+            f"records not in baseline (re-generate it): {extra}")
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        bc = parse_counters(b.get("derived", ""))
+        cc = parse_counters(c.get("derived", ""))
+        for key in EXACT_KEYS:
+            if key in bc and cc.get(key) != bc[key]:
+                failures.append(
+                    f"{name}: counter {key}={cc.get(key)} != baseline "
+                    f"{bc[key]} (compile-once contract changed)")
+        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        if b_us > 0 and c_us > b_us * tolerance:
+            failures.append(
+                f"{name}: {c_us:.1f}us > {tolerance:.0f}x baseline "
+                f"{b_us:.1f}us")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=50.0,
+                    help="max slowdown factor vs baseline (speedups pass)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures = compare(baseline, current, args.tolerance)
+    for msg in failures:
+        print(f"BENCH REGRESSION: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"check_bench: {len(current)} records within tolerance "
+              f"{args.tolerance:.0f}x, counters exact — OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,11 @@
 # CI entry point (CPU): tier-1 tests + quickstart example + the perf-path
 # smoke benchmark suite (fig5 baseline crossover, fig6 engine, fig7
 # connectivity, fig8 distributed kinds — each asserts its own
-# no-retrace/sanity invariants, so a perf-path regression fails the build).
-# Usable locally (no installs needed beyond jax/numpy/networkx) and from
-# .github/workflows/ci.yml.
+# no-retrace/sanity invariants) + the bench-regression gate
+# (scripts/check_bench.py vs the committed BENCH_baseline.json: cache
+# counters exact, timings within a generous tolerance), so a perf-path
+# regression fails the build. Usable locally (no installs needed beyond
+# jax/numpy/networkx) and from .github/workflows/ci.yml.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,5 +24,11 @@ python -m benchmarks.run --only fig5,fig6,fig7 --smoke --json BENCH_ci_smoke.jso
 
 echo "== fig8: per-kind merged-certificate qps (host schedule simulator) =="
 python -m benchmarks.run --only fig8 --smoke --json BENCH_fig8_distributed_kinds.json
+
+echo "== bench-regression gate vs BENCH_baseline.json =="
+python scripts/check_bench.py --baseline BENCH_baseline.json \
+    --current BENCH_ci_smoke.json
+python scripts/check_bench.py --baseline BENCH_baseline_fig8.json \
+    --current BENCH_fig8_distributed_kinds.json
 
 echo "CI OK"

@@ -25,6 +25,10 @@ Each ``Analysis`` declares:
 * ``out_struct`` — the declared fixed result-buffer shapes, checkable with
   ``jax.eval_shape`` (the §Buffers contract for the kind's output).
 * ``incremental`` — servable from the engine's live certificate state.
+* ``decremental`` — servable under edge DELETIONS from the live state via
+  the tombstone + certificate-hit rebuild rule (DESIGN.md §Decremental).
+  True for every built-in kind: the rule is certificate-level, so any kind
+  whose certificate type composes under union inherits it.
 
 See DESIGN.md §Analysis registry for the kind × substrate matrix.
 """
@@ -83,6 +87,7 @@ class Analysis:
     to_result: Callable
     out_struct: Callable
     device_input: str = "certificate"
+    decremental: bool = True
 
 
 _REGISTRY: dict[str, Analysis] = {}
@@ -170,6 +175,7 @@ register(Analysis(
     result="set[(u, v)] bridge pairs",
     certificate="2ec",
     incremental=True,
+    decremental=True,
     device_fn=_bridges_device,
     host_fn=bridges_dfs,
     to_result=_pair_set,
@@ -181,6 +187,7 @@ register(Analysis(
     result="set[int] articulation points",
     certificate="sfs",
     incremental=True,
+    decremental=True,
     device_fn=_cuts_device,
     host_fn=articulation_points_dfs,
     to_result=lambda out, n: set(
@@ -194,6 +201,7 @@ register(Analysis(
     result="int array[n_nodes] canonical 2ECC labels",
     certificate="2ec",
     incremental=True,
+    decremental=True,
     device_fn=_two_ecc_device,
     host_fn=two_ecc_labels_dfs,
     # padding vertices are isolated singletons, so trimming is exact
@@ -206,6 +214,7 @@ register(Analysis(
     result="set[(a, b)] 2ECC supernode pairs",
     certificate="2ec",
     incremental=True,
+    decremental=True,
     device_fn=_bridge_tree_device,
     host_fn=bridge_tree_dfs,
     to_result=_pair_set,
@@ -217,6 +226,7 @@ register(Analysis(
     result="set[frozenset[int]] biconnected blocks as vertex sets",
     certificate="sfs",
     incremental=True,
+    decremental=True,
     device_fn=_bcc_device,
     host_fn=host_bcc_labels,
     to_result=lambda out, n: blocks_to_sets(out),

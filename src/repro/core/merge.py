@@ -43,7 +43,13 @@ from repro.core.certificate import (
     sparse_certificate,
     sparse_certificate_ex,
 )
-from repro.graph.datastructs import INT, EdgeList, compact_edges, concat_edges
+from repro.graph.datastructs import (
+    INT,
+    EdgeList,
+    compact_edges,
+    concat_edges,
+    tombstone_mask,
+)
 
 
 def _axis_size(mesh, axes):
@@ -163,6 +169,7 @@ def build_distributed_analysis_fn(
     final: str = "device",
     merge: str = "recertify",
     kind: str = "bridges",
+    with_deletions: bool = False,
 ):
     """Return a jit-able fn: sharded (src, dst, mask)[M, cap] -> per-machine
     result buffers [M, ...] for ANY analysis-registry kind.
@@ -172,6 +179,14 @@ def build_distributed_analysis_fn(
     final='device') the kind's PRAM final stage on the merged certificate.
     final='host' returns the merged certificate itself; the host then runs
     the kind's sequential reference on the answering machine's shard.
+
+    ``with_deletions=True`` adds three replicated ``(ksrc, kdst, kmask)``
+    deletion-key buffers to the signature: each machine tombstones its own
+    edge shard before certifying, then the phases re-merge as usual — the
+    per-machine re-certify-then-re-merge deletion rule (validated on the
+    host by ``simulate_churn_host``). Keys are global (a failed link is a
+    failed link on whichever machine holds copies of it), hence replicated
+    rather than sharded.
     """
     # Imported lazily: the registry builds on core's pipeline stages, so a
     # module-level import here would be circular (same rule as
@@ -185,19 +200,25 @@ def build_distributed_analysis_fn(
     out_cap = max(n_nodes - 1, 1)
 
     in_spec = P(axes, None)
+    key_spec = P(None)
+    in_specs = ((in_spec,) * 3 + (key_spec,) * 3 if with_deletions
+                else (in_spec,) * 3)
 
     @partial(
         jax.shard_map,
         mesh=mesh,
-        in_specs=(in_spec, in_spec, in_spec),
+        in_specs=in_specs,
         # single-spec prefix: every result leaf is machine-sharded
         out_specs=P(axes, None),
         # while_loop carries mix device-invariant constants (arange labels)
         # with shard-varying data; skip the vma type check.
         check_vma=False,
     )
-    def _body(psrc, pdst, pmask):
-        local = EdgeList(psrc[0], pdst[0], pmask[0], n_nodes)
+    def _body(psrc, pdst, pmask, *keys):
+        lmask = pmask[0]
+        if with_deletions:
+            lmask, _ = tombstone_mask(psrc[0], pdst[0], lmask, *keys)
+        local = EdgeList(psrc[0], pdst[0], lmask, n_nodes)
         cert = merged_certificate(local, mesh, axes, schedule, merge,
                                   certificate=analysis.certificate)
         if final == "device":
@@ -287,6 +308,31 @@ def simulate_merge_host(certs, schedule: str, certify=None, grid=None):
         for r in range(rows):
             g[r][c] = col[r]
     return [cert for row in g for cert in row]
+
+
+def simulate_churn_host(shards, ksrc, kdst, schedule: str = "paper",
+                        certify=None, grid=None):
+    """Host-side simulation of the distributed DELETION rule: tombstone each
+    machine's live edge shard with the (global, replicated) deletion keys,
+    re-certify per machine, then re-run the merge phases. Mirrors
+    ``build_distributed_analysis_fn(with_deletions=True)`` exactly, minus
+    the collectives — the single-device-testable validation path for the
+    decremental distributed substrate (DESIGN.md §Decremental).
+
+    ``shards``: per-machine ``EdgeList`` edge shards (NOT certificates).
+    Returns the per-machine merged certificates, answering-machine
+    convention as in ``simulate_merge_host``.
+    """
+    certify = sparse_certificate if certify is None else certify
+    ks = jnp.asarray(ksrc, INT)
+    kd = jnp.asarray(kdst, INT)
+    km = jnp.ones(ks.shape, bool)
+    certs = []
+    for sh in shards:
+        m2, _ = tombstone_mask(sh.src, sh.dst, sh.mask, ks, kd, km)
+        certs.append(certify(EdgeList(sh.src, sh.dst, m2, sh.n_nodes),
+                             capacity=certificate_capacity(sh.n_nodes)))
+    return simulate_merge_host(certs, schedule, certify=certify, grid=grid)
 
 
 def result_shard_zero(arr):

@@ -25,7 +25,13 @@ from repro.connectivity.registry import (  # noqa: F401  (re-exports)
     normalize_kind,
 )
 from repro.core.certificate import certificate_capacity
-from repro.graph.datastructs import INT, EdgeList, pad_edges
+from repro.graph.datastructs import (
+    INT,
+    EdgeList,
+    bucket_capacity,
+    pad_edges,
+    tombstone_mask,
+)
 
 
 @partial(
@@ -88,9 +94,40 @@ class BatchedEdgeList:
                          + [jnp.zeros((capacity,), bool)] * (total - b))
         return BatchedEdgeList(src, dst, mask, n_nodes)
 
+    def delete_edges(self, deletions) -> "BatchedEdgeList":
+        """Tombstone per-graph deletion keys out of the batch in ONE vmapped
+        device dispatch (DESIGN.md §Decremental).
+
+        ``deletions``: iterable of per-graph ``(ksrc, kdst)`` endpoint-pair
+        arrays (or ``None`` for no deletions in that row), at most one entry
+        per batch row. Every live copy of a matched pair is masked out; the
+        buffers keep their shapes, so downstream batched programs reuse
+        their compiled executables.
+        """
+        dels = list(deletions)
+        if len(dels) > self.batch_size:
+            raise ValueError(
+                f"{len(dels)} deletion lists for a batch of {self.batch_size}")
+        empty = (np.zeros(0, np.int32), np.zeros(0, np.int32))
+        keys = [empty if sd is None
+                else (np.asarray(sd[0], np.int32), np.asarray(sd[1], np.int32))
+                for sd in dels]
+        kcap = bucket_capacity(max((len(s) for s, _ in keys), default=1), 1)
+        kel = BatchedEdgeList.from_graphs(keys, self.n_nodes, capacity=kcap,
+                                          batch_pad=self.batch_size)
+        mask, _ = _batched_tombstone(self.src, self.dst, self.mask,
+                                     kel.src, kel.dst, kel.mask)
+        return BatchedEdgeList(self.src, self.dst, mask, self.n_nodes)
+
+
+#: jit caches per (capacity, key-capacity, batch) shape — the batched
+#: tombstone compiles once per bucket like every other engine program.
+_batched_tombstone = jax.jit(jax.vmap(tombstone_mask))
+
 
 def make_analysis_fn(n_nodes: int, kind: str = "bridges",
-                     final: str = "device", on_trace=None):
+                     final: str = "device", on_trace=None,
+                     with_delete: bool = False):
     """The un-vmapped query core for one analysis kind, registry-driven.
 
     ``(src, dst, mask) ->`` the kind's declared device buffers (see
@@ -107,6 +144,11 @@ def make_analysis_fn(n_nodes: int, kind: str = "bridges",
     final-stage test. This single function is the pipeline body for BOTH
     the engine's single-graph programs and, lifted by ``jax.vmap``, the
     batched ones.
+
+    ``with_delete=True`` prepends a tombstone pass: the function takes
+    three extra ``(ksrc, kdst, kmask)`` deletion-key buffers and answers
+    on the graph minus every matched pair (DESIGN.md §Decremental) — the
+    one-shot spelling of deletion, on every substrate.
     """
     analysis = get_analysis(kind)
     if final not in ("device", "host"):
@@ -115,9 +157,11 @@ def make_analysis_fn(n_nodes: int, kind: str = "bridges",
     out_cap = max(n_nodes - 1, 1)
     certify = certificate_fn(analysis.certificate)
 
-    def one(src, dst, mask):
+    def one(src, dst, mask, *keys):
         if on_trace is not None:
             on_trace()
+        if with_delete:
+            mask, _ = tombstone_mask(src, dst, mask, *keys)
         buf = EdgeList(src, dst, mask, n_nodes)
         if final == "host" or analysis.device_input == "certificate":
             buf = certify(buf, capacity=cert_cap)
@@ -136,6 +180,7 @@ def make_query_fn(n_nodes: int, final: str = "device", on_trace=None):
 
 
 def make_batched_pipeline(n_nodes: int, final: str = "device", on_trace=None,
-                          kind: str = "bridges"):
+                          kind: str = "bridges", with_delete: bool = False):
     """jit(vmap(one-graph analysis)) over the leading batch axis."""
-    return jax.jit(jax.vmap(make_analysis_fn(n_nodes, kind, final, on_trace)))
+    return jax.jit(jax.vmap(make_analysis_fn(n_nodes, kind, final, on_trace,
+                                             with_delete=with_delete)))

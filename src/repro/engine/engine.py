@@ -32,6 +32,17 @@ that into the three properties a query-serving deployment needs:
   the live state and re-runs only the final analysis stage, never the
   full pipeline.
 
+* **decremental** — ``delete_edges`` serves edge deletions (link failures —
+  the paper's workload) from the same live state. Deletions are a
+  compile-once tombstone pass over the live full edge buffer ((min, max)
+  key match, shape-bucketed like every other program), followed by the
+  certificate-hit rule: if no deleted edge sits in a live certificate the
+  certificate is untouched and serving stays warm (the common dense-graph
+  case — certificates hold ≤ 2(n−1) of the E edges); if a certificate
+  edge dies, that certificate pair is rebuilt from the surviving buffer
+  through the already-cached ``load``/``sfs_load`` programs
+  (DESIGN.md §Decremental).
+
 Bucketing the vertex count is sound because every stage treats the extra
 vertices as isolated: they join no component, appear on no tour, and can
 never be a bridge endpoint. Bucketing the edge capacity is sound because all
@@ -63,7 +74,9 @@ from repro.engine.batched import (
 from repro.graph.datastructs import (
     EdgeList,
     bucket_capacity,
+    compact_edges,
     concat_edges,
+    tombstone_mask,
 )
 
 
@@ -145,13 +158,23 @@ class BridgeEngine:
     def _tick_trace(self):
         self.stats.traces += 1
 
+    def _delete_keys(self, delete, n_nodes: int):
+        """One-shot deletion keys -> (padded key EdgeList, key bucket).
+        Shared by the single-graph and distributed ``delete=`` paths."""
+        ks = np.asarray(delete[0], np.int32)
+        kd = np.asarray(delete[1], np.int32)
+        kcap = self._bucket(max(len(ks), 1))
+        return EdgeList.from_arrays(ks, kd, n_nodes, capacity=kcap), kcap
+
     # ---------------------------------------------------------- single device
-    def _build_single(self, n_bucket: int, kind: str, final: str):
+    def _build_single(self, n_bucket: int, kind: str, final: str,
+                      with_delete: bool = False):
         return jax.jit(make_analysis_fn(n_bucket, kind, final,
-                                        self._tick_trace))
+                                        self._tick_trace,
+                                        with_delete=with_delete))
 
     def analyze(self, src, dst, n_nodes: int, *, kind: str = "bridges",
-                final: str = "device", seed: int = 0):
+                final: str = "device", seed: int = 0, delete=None):
         """One graph, one analysis kind; compile-once per shape bucket.
 
         kind='bridges'     -> set[(u, v)] bridge pairs
@@ -163,21 +186,37 @@ class BridgeEngine:
         ``final='host'`` answers with the kind's sequential host reference
         run on the kind's sparse certificate instead of the device final
         stage. ``seed`` only affects the distributed edge partition.
+
+        ``delete=(ksrc, kdst)`` answers on the graph MINUS every live copy
+        of the given unordered endpoint pairs: the one-shot spelling of a
+        link-failure query, served by the same cached program (a tombstone
+        pass prepended to the pipeline; key buffers shape-bucketed like
+        the edges). Works on the distributed substrate too — keys are
+        replicated and each machine tombstones its own shard before the
+        certificate/merge phases.
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
         if self.mesh is not None:
             return self._analyze_distributed(src, dst, n_nodes, kind=kind,
-                                             final=final, seed=seed)
+                                             final=final, seed=seed,
+                                             delete=delete)
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         n_bucket = self._bucket(n_nodes)
         cap = self._bucket(max(len(src), 1))
         el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        key = ("single", kind, final, n_bucket, cap, self.backend, None)
+        args = (el.src, el.dst, el.mask)
+        kcap = None
+        if delete is not None:
+            kel, kcap = self._delete_keys(delete, n_bucket)
+            args += (kel.src, kel.dst, kel.mask)
+        key = ("single", kind, final, n_bucket, cap, kcap, self.backend,
+               None)
         fn = self._program(
-            key, lambda: self._build_single(n_bucket, kind, final))
-        out = fn(el.src, el.dst, el.mask)
+            key, lambda: self._build_single(n_bucket, kind, final,
+                                            with_delete=kcap is not None))
+        out = fn(*args)
         if final == "host":
             return analysis.host_fn(*_masked_arrays(out), n_nodes)
         return analysis.to_result(out, n_nodes)
@@ -206,12 +245,16 @@ class BridgeEngine:
 
     # ----------------------------------------------------------------- batched
     def analyze_batch(self, graphs, n_nodes, *, kind: str = "bridges",
-                      final: str = "device") -> list:
+                      final: str = "device", delete=None) -> list:
         """Resolve B independent graphs in ONE device dispatch.
 
         ``graphs``: iterable of (src, dst) pairs. ``n_nodes``: shared vertex
         count, or a per-graph sequence (bucketed to the max). Returns the
         per-graph results in order, typed per ``analyze``'s kind table.
+
+        ``delete``: optional per-graph deletion-key lists — ``(ksrc, kdst)``
+        or ``None`` per graph — applied as a vmapped tombstone pass inside
+        the same dispatch (each graph answers minus its own failed links).
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
@@ -232,15 +275,29 @@ class BridgeEngine:
         b_bucket = bucket_capacity(len(graphs), 1)
         bel = BatchedEdgeList.from_graphs(graphs, n_bucket, capacity=cap,
                                           batch_pad=b_bucket)
-        key = ("batch", kind, final, n_bucket, cap, b_bucket, self.backend,
-               None)
+        args = (bel.src, bel.dst, bel.mask)
+        kcap = None
+        if delete is not None:
+            delete = list(delete)
+            if len(delete) != len(graphs):
+                raise ValueError(
+                    f"{len(graphs)} graphs but {len(delete)} deletion lists")
+            empty = (np.zeros(0, np.int32), np.zeros(0, np.int32))
+            keys = [empty if sd is None else sd for sd in delete]
+            kcap = self._bucket(max((len(s) for s, _ in keys), default=1))
+            kel = BatchedEdgeList.from_graphs(keys, n_bucket, capacity=kcap,
+                                              batch_pad=b_bucket)
+            args += (kel.src, kel.dst, kel.mask)
+        key = ("batch", kind, final, n_bucket, cap, b_bucket, kcap,
+               self.backend, None)
         fn = self._program(
             key,
             lambda: make_batched_pipeline(n_bucket, final=final,
                                           on_trace=self._tick_trace,
-                                          kind=kind),
+                                          kind=kind,
+                                          with_delete=kcap is not None),
         )
-        out_dev = fn(bel.src, bel.dst, bel.mask)
+        out_dev = fn(*args)
         stacked = (tuple(np.asarray(x) for x in out_dev)
                    if isinstance(out_dev, (tuple, list))
                    else (np.asarray(out_dev),))
@@ -329,22 +386,55 @@ class BridgeEngine:
 
         return jax.jit(run)
 
+    def _build_append(self, n_bucket: int, out_cap: int):
+        """Compact-append the delta into the live full buffer: tombstoned
+        holes are reclaimed, real edges land at the front, and the output
+        capacity is a host-chosen bucket (same as the input except when the
+        live edge count crosses it — the only churn event that compiles a
+        new program)."""
+
+        def run(fs, fd, fm, rs, rd, rm):
+            self._tick_trace()
+            out = compact_edges(
+                concat_edges(EdgeList(fs, fd, fm, n_bucket),
+                             EdgeList(rs, rd, rm, n_bucket)), out_cap)
+            return out.src, out.dst, out.mask
+
+        return jax.jit(run)
+
+    def _build_delete(self):
+        """Tombstone pass: mask matched (min, max) keys out of a buffer and
+        count the kills. Shared by the full-buffer deletion and the
+        certificate-hit probe (same program per (capacity, key-bucket))."""
+
+        def run(s, d, m, ks, kd, km):
+            self._tick_trace()
+            return tombstone_mask(s, d, m, ks, kd, km)
+
+        return jax.jit(run)
+
+    def _delete_pass(self, buffers, keys):
+        """Run the cached tombstone program for ``buffers``' shape bucket.
+        Returns (new_mask, removed-count device scalar)."""
+        s, d, m = buffers
+        key = ("delete", s.shape[0], keys.capacity, self.backend, None)
+        fn = self._program(key, lambda: self._build_delete())
+        return fn(s, d, m, keys.src, keys.dst, keys.mask)
+
     def _materialize_sfs(self) -> tuple:
         """Lazy second certificate: the scan-first-search pair is only
-        computed (from the host-retained edge record) on the FIRST
+        computed (from the live full buffer) on the FIRST
         vertex-connectivity query, so 2-edge-only incremental workloads
         never pay the BFS passes. Once live it is maintained on device per
-        delta and the host record is dropped."""
+        delta (and rebuilt from the full buffer when a deletion kills one
+        of its edges)."""
         live = self._live
         if live["sfs"] is None:
-            src, dst = live["host_edges"]
+            fs, fd, fm = live["full"]
             n_bucket = live["n_bucket"]
-            cap = self._bucket(max(len(src), 1))
-            el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-            key = ("sfs_load", n_bucket, cap, self.backend, None)
+            key = ("sfs_load", n_bucket, fs.shape[0], self.backend, None)
             fn = self._program(key, lambda: self._build_sfs_load(n_bucket))
-            live["sfs"] = tuple(fn(el.src, el.dst, el.mask))
-            live["host_edges"] = None  # device state carries it from here
+            live["sfs"] = tuple(fn(fs, fd, fm))
         return live["sfs"]
 
     def _build_final(self, n_bucket: int, kind: str):
@@ -363,7 +453,10 @@ class BridgeEngine:
         """Set the engine's live graph: the warm-start Borůvka certificate
         pair, computed now, plus a lazily-materialized scan-first-search
         pair for the vertex-connectivity kinds (see ``_materialize_sfs`` —
-        2-edge-only serving pays nothing for it)."""
+        2-edge-only serving pays nothing for it). The full edge buffer
+        stays resident on device: it is the tombstone target for
+        ``delete_edges`` and the rebuild source when a deletion kills a
+        certificate edge."""
         if self.mesh is not None:
             raise NotImplementedError(
                 "incremental updates are single-device; use mesh=None")
@@ -377,7 +470,8 @@ class BridgeEngine:
         cs, cd, cm, lab1, lab2 = fn(el.src, el.dst, el.mask)
         self._live = {
             "2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2,
-            "sfs": None, "host_edges": (src, dst),
+            "sfs": None, "full": (el.src, el.dst, el.mask),
+            "count": len(src), "rebuilds": {"2ec": 0, "sfs": 0},
             "n_nodes": int(n_nodes), "n_bucket": n_bucket,
         }
         return self
@@ -388,6 +482,23 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         return int(np.asarray(self._live["2ec"][2]).sum())
+
+    @property
+    def num_live_graph_edges(self) -> int:
+        """Edge count of the live FULL graph (inserts minus deletions),
+        tracked on host — no device sync."""
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        return self._live["count"]
+
+    @property
+    def live_rebuilds(self) -> dict:
+        """Per-certificate rebuild counts caused by certificate-hit
+        deletions ({'2ec': int, 'sfs': int}) — the observable for 'most
+        deletions are free' (DESIGN.md §Decremental)."""
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        return dict(self._live["rebuilds"])
 
     def insert_edges(self, src, dst, *, final: str = "device",
                      kind: str = "bridges"):
@@ -403,8 +514,11 @@ class BridgeEngine:
         (DESIGN.md §Connectivity counterexample, pinned as a regression
         test) — updates by re-scanning the bounded cert ∪ delta buffer,
         but only once some vertex-connectivity query has materialized it;
-        until then deltas are appended to the host edge record and the
-        BFS passes cost nothing. The full pipeline is never re-run.
+        until then its BFS passes cost nothing (the first such query
+        builds it from the live full buffer, ``_materialize_sfs``). The
+        delta is also compact-appended into the device-resident full
+        buffer — the ``delete_edges`` tombstone target and rebuild source
+        (DESIGN.md §Decremental). The full pipeline is never re-run.
         """
         kind = normalize_kind(kind)
         if self._live is None:
@@ -428,10 +542,91 @@ class BridgeEngine:
                 skey, lambda: self._build_insert_sfs(n_bucket))
             live["sfs"] = tuple(sfn(*live["sfs"],
                                     recv.src, recv.dst, recv.mask))
-        else:
-            hs, hd = live["host_edges"]
-            live["host_edges"] = (np.concatenate([hs, src]),
-                                  np.concatenate([hd, dst]))
+        # Keep the live FULL buffer current: compact-append the delta,
+        # reclaiming tombstoned holes. The edge count is tracked on host so
+        # the output bucket (and thus a possible grow-retrace) is a static
+        # shape decision; same-bucket churn reuses one compiled program.
+        fs, fd, fm = live["full"]
+        needed = live["count"] + len(src)
+        out_cap = (fs.shape[0] if needed <= fs.shape[0]
+                   else bucket_capacity(needed, self.min_bucket))
+        akey = ("append", n_bucket, fs.shape[0], delta_cap, out_cap,
+                self.backend)
+        afn = self._program(
+            akey, lambda: self._build_append(n_bucket, out_cap))
+        live["full"] = tuple(afn(fs, fd, fm, recv.src, recv.dst, recv.mask))
+        live["count"] = needed
+        return self.current_analysis(kind=kind, final=final)
+
+    def delete_edges(self, src, dst, *, final: str = "device",
+                     kind: str = "bridges"):
+        """Serve edge DELETIONS (link failures) from the live state, return
+        the updated analysis for ANY registry kind (``current_analysis``).
+
+        Each ``(src[i], dst[i])`` names a link by unordered endpoint pair;
+        every live copy of a matched pair dies. Mechanism (DESIGN.md
+        §Decremental):
+
+        1. **Tombstone** the live full buffer: one cached program per
+           (buffer bucket, key bucket) masks out matches in place — the
+           buffer keeps its shape, so churn never recompiles.
+        2. **Certificate-hit rule**: probe each live certificate with the
+           same tombstone program. A certificate whose edges all survive
+           is still a valid sparse certificate of the smaller graph (its
+           forests are still spanning: deleting a non-forest edge cannot
+           disconnect what the forests connect), so serving continues
+           warm — the common dense-graph case, since certificates hold
+           ≤ 2(n−1) of the E live edges. If a certificate edge dies, that
+           pair is rebuilt from the surviving full buffer through the
+           already-cached ``load``/``sfs_load`` programs (no new kernels,
+           no retrace after warm-up).
+
+        The removed-count and per-certificate hit counts are the only host
+        syncs in the delete path (the rebuild decision is host-side control
+        flow): one small scalar readback per probed buffer, up to three
+        per delete. Fusing them into one probe program is a possible
+        future micro-optimization; the counters gate in
+        ``scripts/check_bench.py`` pins today's program structure.
+        """
+        analysis = get_analysis(kind)
+        kind = analysis.kind
+        if not analysis.decremental:
+            raise NotImplementedError(
+                f"kind {kind!r} is not registered as decremental")
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "live deletions are single-device; use mesh=None (one-shot "
+                "distributed deletion: analyze(..., delete=...))")
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        live = self._live
+        n_bucket = live["n_bucket"]
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        kcap = self._bucket(max(len(src), 1))
+        keys = EdgeList.from_arrays(src, dst, n_bucket, capacity=kcap)
+
+        fs, fd, fm = live["full"]
+        fm, removed = self._delete_pass((fs, fd, fm), keys)
+        live["full"] = (fs, fd, fm)
+        live["count"] -= int(removed)
+
+        _, hit2ec = self._delete_pass(live["2ec"], keys)
+        if int(hit2ec):
+            live["rebuilds"]["2ec"] += 1
+            lkey = ("load", n_bucket, fs.shape[0], self.backend, None)
+            lfn = self._program(lkey, lambda: self._build_load(n_bucket))
+            cs, cd, cm, lab1, lab2 = lfn(fs, fd, fm)
+            live.update({"2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2})
+        if live["sfs"] is not None:
+            _, hitsfs = self._delete_pass(live["sfs"], keys)
+            if int(hitsfs):
+                live["rebuilds"]["sfs"] += 1
+                skey = ("sfs_load", n_bucket, fs.shape[0], self.backend,
+                        None)
+                sfn = self._program(
+                    skey, lambda: self._build_sfs_load(n_bucket))
+                live["sfs"] = tuple(sfn(fs, fd, fm))
         return self.current_analysis(kind=kind, final=final)
 
     def current_analysis(self, kind: str = "bridges", *,
@@ -466,16 +661,18 @@ class BridgeEngine:
     def _machines(self) -> int:
         return math.prod(self.mesh.shape[a] for a in self.machine_axes)
 
-    def _build_distributed(self, n_nodes: int, kind: str, final: str):
+    def _build_distributed(self, n_nodes: int, kind: str, final: str,
+                           with_delete: bool = False):
         from repro.core.merge import build_distributed_analysis_fn
 
         fn = build_distributed_analysis_fn(
             self.mesh, self.machine_axes, n_nodes, schedule=self.schedule,
-            final=final, merge=self.merge, kind=kind)
+            final=final, merge=self.merge, kind=kind,
+            with_deletions=with_delete)
         return jax.jit(fn)
 
     def _analyze_distributed(self, src, dst, n_nodes: int, *, kind: str,
-                             final: str, seed: int):
+                             final: str, seed: int, delete=None):
         from repro.core.partition import partition_edges
 
         analysis = get_analysis(kind)
@@ -489,12 +686,20 @@ class BridgeEngine:
             psrc = np.pad(psrc, ((0, 0), (0, pad)))
             pdst = np.pad(pdst, ((0, 0), (0, pad)))
             pmask = np.pad(pmask, ((0, 0), (0, pad)))
-        key = ("dist", kind, n_nodes, shard_cap, self.backend, self.schedule,
-               final, self.merge)
+        args = (jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
+        kcap = None
+        if delete is not None:
+            # deletion keys are global: replicate to every machine, each
+            # tombstones its own shard before certifying (core/merge.py)
+            kel, kcap = self._delete_keys(delete, n_nodes)
+            args += (kel.src, kel.dst, kel.mask)
+        key = ("dist", kind, n_nodes, shard_cap, kcap, self.backend,
+               self.schedule, final, self.merge)
         fn = self._program(
-            key, lambda: self._build_distributed(n_nodes, kind, final))
+            key, lambda: self._build_distributed(n_nodes, kind, final,
+                                                 with_delete=kcap is not None))
         with jax.set_mesh(self.mesh):
-            out = fn(jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
+            out = fn(*args)
         # machine 0 (paper) — or any machine under xor/hierarchical — answers
         shard0 = jax.tree_util.tree_map(lambda x: np.asarray(x)[0], out)
         if final == "host":

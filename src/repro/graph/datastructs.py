@@ -116,6 +116,26 @@ def compact_edges(edges: EdgeList, capacity: int, keep: jax.Array | None = None)
     return EdgeList(out_src, out_dst, out_mask, edges.n_nodes)
 
 
+def tombstone_mask(src, dst, mask, ksrc, kdst, kmask):
+    """Mask out every live slot whose unordered endpoint pair matches a key.
+
+    The decremental-serving primitive (DESIGN.md §Decremental): a deletion
+    is a (min, max)-key match against the live buffer, never a compaction,
+    so the buffer keeps its shape and the surrounding program its compiled
+    executable. Matches ALL live copies of a key (an endpoint pair names a
+    link; its parallel copies die with it). Returns ``(new_mask, removed)``
+    where ``removed`` counts the slots masked out. Rank-polymorphic jnp —
+    ``jax.vmap`` lifts it to batched buffers unchanged.
+    """
+    lo, hi = jnp.minimum(src, dst), jnp.maximum(src, dst)
+    klo, khi = jnp.minimum(ksrc, kdst), jnp.maximum(ksrc, kdst)
+    eq = ((lo[..., :, None] == klo[..., None, :])
+          & (hi[..., :, None] == khi[..., None, :])
+          & kmask[..., None, :])
+    hit = mask & jnp.any(eq, axis=-1)
+    return mask & ~hit, jnp.sum(hit.astype(INT))
+
+
 def concat_edges(a: EdgeList, b: EdgeList) -> EdgeList:
     assert a.n_nodes == b.n_nodes
     return EdgeList(

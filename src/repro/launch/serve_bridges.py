@@ -13,10 +13,16 @@ whether single/batched/incremental/distributed serving applies — so
 dashboards can track the substrate matrix. ``--json`` writes the per-kind
 rates plus the engine's cache hit/miss/trace counters.
 
+``--workload churn`` makes the incremental phase interleave link FAILURES
+(``delete_edges``, at ``--delete-ratio``) with the inserts — the paper's
+serving story end to end; the report then also carries the deletion count
+and per-certificate rebuild counters (most deletions never touch a
+certificate and are free, DESIGN.md §Decremental).
+
     PYTHONPATH=src python -m repro.launch.serve_bridges --smoke
     PYTHONPATH=src python -m repro.launch.serve_bridges \
         --analysis all --batch 8 --queries 64 --n 512 --edges 8192 \
-        --json SERVE.json
+        --workload churn --delete-ratio 0.3 --json SERVE.json
 """
 from __future__ import annotations
 
@@ -45,8 +51,18 @@ def substrates(kind: str) -> dict:
         "single": True,
         "batched": True,
         "incremental": a.incremental,
+        "decremental": a.decremental,
         "distributed": True,
     }
+
+
+def _drop_pairs(all_s, all_d, ks, kd):
+    """Host mirror of a deletion: remove every copy of the keyed pairs."""
+    kset = set(zip(np.minimum(ks, kd).tolist(), np.maximum(ks, kd).tolist()))
+    lo, hi = np.minimum(all_s, all_d), np.maximum(all_s, all_d)
+    keep = np.array([(a, b) not in kset for a, b in
+                     zip(lo.tolist(), hi.tolist())], bool)
+    return all_s[keep], all_d[keep]
 
 
 def make_queries(num: int, n: int, edges: int, seed: int = 0):
@@ -116,28 +132,48 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
 
     # ---- incremental serving (every registry kind rides the live state:
     # 2-edge kinds off the warm-start Borůvka pair, cuts/bcc off the live
-    # scan-first-search pair — DESIGN.md §Analysis registry) ---------------
+    # scan-first-search pair — DESIGN.md §Analysis registry). Workload
+    # 'insert' is insert-only; 'churn' interleaves link failures
+    # (delete_edges) at --delete-ratio, the paper's serving story ---------
     if args.deltas > 0 and analysis.incremental:
         s0, d0, nq0 = queries[0]
         engine.load(s0, d0, nq0)
         all_s, all_d = s0, d0
+        rng = np.random.default_rng(args.seed + 17)
+        deletions = 0
         t0 = time.perf_counter()
         for k in range(args.deltas):
-            ds, dd = gen.random_graph(nq0, args.delta_edges,
-                                      seed=args.seed + 500 + k)
-            got = engine.insert_edges(ds, dd, kind=kind)
-            all_s = np.concatenate([all_s, ds])
-            all_d = np.concatenate([all_d, dd])
+            churn_del = (args.workload == "churn"
+                         and rng.random() < args.delete_ratio
+                         and len(all_s) > args.delta_edges)
+            if churn_del:
+                # fail delta_edges live links (same key bucket as inserts)
+                idx = rng.choice(len(all_s), args.delta_edges, replace=False)
+                ks, kd = all_s[idx], all_d[idx]
+                got = engine.delete_edges(ks, kd, kind=kind)
+                all_s, all_d = _drop_pairs(all_s, all_d, ks, kd)
+                deletions += 1
+            else:
+                ds, dd = gen.random_graph(nq0, args.delta_edges,
+                                          seed=args.seed + 500 + k)
+                got = engine.insert_edges(ds, dd, kind=kind)
+                all_s = np.concatenate([all_s, ds])
+                all_d = np.concatenate([all_d, dd])
         dt = time.perf_counter() - t0
         if args.verify:
             want = host_ref(all_s, all_d, nq0)
             assert _same(kind, got, want), f"{kind} incremental mismatch"
         ups = args.deltas / max(dt, 1e-9)
+        rebuilds = engine.live_rebuilds
         print(f"[{kind:11s}] increment: {args.deltas} deltas x "
-              f"{args.delta_edges} edges | {ups:.1f} updates/s | "
-              f"live cert edges {engine.num_live_edges}", flush=True)
+              f"{args.delta_edges} edges ({deletions} deletions) | "
+              f"{ups:.1f} updates/s | live cert edges "
+              f"{engine.num_live_edges} | rebuilds {rebuilds}", flush=True)
         stats["incremental"] = {"deltas": args.deltas,
                                 "delta_edges": args.delta_edges,
+                                "workload": args.workload,
+                                "deletions": deletions,
+                                "cert_rebuilds": rebuilds,
                                 "updates_per_s": ups,
                                 "live_cert_edges": engine.num_live_edges}
     return stats
@@ -155,6 +191,13 @@ def main(argv=None):
     ap.add_argument("--deltas", type=int, default=16,
                     help="incremental updates served after the batched phase")
     ap.add_argument("--delta-edges", type=int, default=64)
+    ap.add_argument("--workload", choices=["insert", "churn"],
+                    default="insert",
+                    help="incremental phase: insert-only, or churn with "
+                         "interleaved link failures (delete_edges)")
+    ap.add_argument("--delete-ratio", type=float, default=0.25,
+                    help="churn workload: fraction of deltas that are "
+                         "deletions")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--verify", action="store_true",
@@ -185,6 +228,7 @@ def main(argv=None):
         print(f"substrate: {row['kind']:11s} cert={sub['certificate']} "
               f"single={sub['single']} batched={sub['batched']} "
               f"incremental={sub['incremental']} "
+              f"decremental={sub['decremental']} "
               f"distributed={sub['distributed']}", flush=True)
     report = {"kinds": per_kind, "engine": info,
               "config": {"batch": args.batch, "queries": args.queries,
