@@ -3,9 +3,8 @@
 Shows the V*log(M) merge term take over as the graph gets sparser."""
 from __future__ import annotations
 
-import numpy as np
-
 import jax
+import numpy as np
 
 from benchmarks.common import csv_row, timeit
 from repro.core.certificate import sparse_certificate

@@ -3,9 +3,8 @@ the algorithm targets: time grows ~linearly in E/M while the merge/final
 terms stay constant."""
 from __future__ import annotations
 
-import numpy as np
-
 import jax
+import numpy as np
 
 from benchmarks.common import csv_row, timeit
 from repro.core.certificate import sparse_certificate

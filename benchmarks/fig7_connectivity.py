@@ -13,6 +13,13 @@ Plus the host Tarjan articulation-point reference on the same graph, so
 the device-vs-host crossover for the new query family is tracked next to
 fig5's bridges baseline. Sanity: every timed engine result is checked once
 against the planted ground truth of a failure scenario.
+
+The closing ``fig7/path_world_rounds`` record tracks the hybrid
+certificate's reason to exist: on an n=1024 path world the plain SFS pair
+pays one BFS round per vertex, while the hybrid contracts the chain first
+and scans a constant-diameter graph. The round counters are deterministic
+and pinned exactly by ``scripts/check_bench.py`` against the committed
+baseline, with the ≥4× bound asserted inline.
 """
 from __future__ import annotations
 
@@ -22,10 +29,15 @@ import numpy as np
 
 from benchmarks.common import csv_row, timeit
 from repro.connectivity.host import articulation_points_dfs
+from repro.core.certificate import hybrid_certificate_ex, sfs_certificate_ex
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
 
 KINDS = ("cuts", "2ecc", "bridge_tree", "bcc")
+
+#: path-world size for the round-count record (acceptance: n >= 1024)
+PATH_N = 1024
 
 
 def run(out, smoke: bool = False):
@@ -77,4 +89,20 @@ def run(out, smoke: bool = False):
     out.append(csv_row("fig7/host_tarjan_cuts", t_host,
                        f"V={v} E={e} vs_device="
                        f"{t_host / max(cached['cuts'], 1e-9):.1f}x"))
+
+    # path world: SFS vs hybrid BFS-round counts (both deterministic; the
+    # check_bench gate pins them exactly, the assert enforces the bound)
+    ps = np.arange(PATH_N - 1, dtype=np.int32)
+    el = EdgeList.from_arrays(ps, ps + 1, PATH_N)
+    _, _, _, (sr1, sr2) = sfs_certificate_ex(el)
+    sfs_rounds = int(sr1) + int(sr2)
+    t_hyb = timeit(lambda: hybrid_certificate_ex(el))
+    _, (hr0, hr1, hr2) = hybrid_certificate_ex(el)
+    hybrid_rounds = int(hr1) + int(hr2)
+    assert hybrid_rounds * 4 <= sfs_rounds, \
+        f"hybrid rounds {hybrid_rounds} not >=4x under sfs {sfs_rounds}"
+    out.append(csv_row(
+        "fig7/path_world_rounds", t_hyb,
+        f"V={PATH_N} sfs_rounds={sfs_rounds} hybrid_rounds={hybrid_rounds} "
+        f"chain_rounds={int(hr0)}"))
     return out

@@ -26,7 +26,8 @@ import numpy as np
 from benchmarks.common import csv_row, timeit
 from repro.connectivity.common import tour_state
 from repro.connectivity.registry import analysis_kinds, get_analysis
-from repro.core.certificate import CERTIFICATE_BUILDERS, certificate_capacity
+from repro.core.certificate import certificate_capacity
+from repro.core.certs import certificate_builder
 from repro.core.merge import simulate_merge_host
 from repro.core.partition import partition_edges
 from repro.graph import generators as gen
@@ -58,7 +59,7 @@ def run(out, smoke: bool = False):
 
     for kind in analysis_kinds():
         analysis = get_analysis(kind)
-        certify = CERTIFICATE_BUILDERS[analysis.certificate]
+        certify = certificate_builder(analysis.certificate)
         cap = certificate_capacity(v)
         psrc, pdst, pmask = partition_edges(src, dst, v, m, seed=0)
         locals_ = [

@@ -6,11 +6,15 @@ Two classes of checks, by design very different in strictness:
 
 * **Counters are exact.** Records may pin program-cache counters in their
   ``derived`` column as ``key=value`` tokens (e.g. ``fig6/engine_cache``'s
-  ``programs=.. misses=.. traces=..``). These are deterministic for a fixed
-  operating sequence — a mismatch means the compile-once contract changed
-  (a retrace snuck into the serving path, a program key split or merged),
-  which is precisely the perf regression CI must catch even though wall
-  times on shared runners are too noisy to gate on.
+  ``programs=.. misses=.. traces=..``), and algorithm round counters
+  (``fig7/path_world_rounds``'s ``sfs_rounds=.. hybrid_rounds=..
+  chain_rounds=..``). These are deterministic for a fixed operating
+  sequence — a mismatch means the compile-once contract changed (a retrace
+  snuck into the serving path, a program key split or merged) or a
+  certificate's round complexity regressed (the hybrid chain contraction
+  stopped bounding BFS depth), which is precisely the perf regression CI
+  must catch even though wall times on shared runners are too noisy to
+  gate on.
 
 * **Timings are generous.** ``us_per_call`` may drift with runner hardware;
   a record only fails when it is more than ``--tolerance`` times SLOWER
@@ -31,8 +35,10 @@ import json
 import re
 import sys
 
-#: derived-column counter keys pinned exactly (deterministic by design)
-EXACT_KEYS = ("programs", "misses", "traces")
+#: derived-column counter keys pinned exactly (deterministic by design):
+#: engine program-cache counters + certificate round counters
+EXACT_KEYS = ("programs", "misses", "traces",
+              "sfs_rounds", "hybrid_rounds", "chain_rounds")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

@@ -11,13 +11,16 @@ makes it servable on every substrate with zero engine changes.
 
 Each ``Analysis`` declares:
 
-* ``certificate`` — which sparse certificate preserves the kind's answer:
-  ``"2ec"`` (Borůvka forest pair; bridges / 2ECC / bridge tree) or
-  ``"sfs"`` (scan-first-search BFS-layer forest pair; articulation points /
-  biconnected blocks — vertex connectivity, which arbitrary forests
-  provably do not preserve; DESIGN.md §Connectivity). Both certificates
-  live in 2(n−1)-slot buffers and compose under union-merge, so every kind
-  rides the same merge schedules.
+* ``certificate`` — the kind's DEFAULT sparse certificate, named into the
+  certificate registry (``core.certs``): ``"2ec"`` (Borůvka forest pair;
+  bridges / 2ECC / bridge tree) or ``"sfs"`` (scan-first-search BFS-layer
+  forest pair; articulation points / biconnected blocks — vertex
+  connectivity, which arbitrary forests provably do not preserve;
+  DESIGN.md §Connectivity). Engine callers may override it per query with
+  any registered certificate that preserves at least what the default
+  does (e.g. ``"hybrid"`` for the vertex kinds). All registered types
+  live in 2(n−1)-slot buffers and compose under union-merge, so every
+  kind rides the same merge schedules.
 * ``device_fn`` — the traced final stage over the shared ``tour_state``.
 * ``host_fn`` — the sequential host reference (also the ``final='host'``
   answering stage, run on the certificate's edges).
@@ -54,7 +57,7 @@ from repro.connectivity.host import (
     two_ecc_labels_dfs,
 )
 from repro.core.bridges_host import bridges_dfs
-from repro.core.certificate import CERTIFICATE_BUILDERS
+from repro.core.certs import certificate_names, get_certificate
 from repro.graph.datastructs import INT, EdgeList, compact_edges
 
 
@@ -96,11 +99,15 @@ _ALIASES = {"two_ecc": "2ecc", "blocks": "bcc"}
 
 
 def register(analysis: Analysis) -> Analysis:
-    """Add (or replace) a kind; returns the descriptor for chaining."""
-    if analysis.certificate not in CERTIFICATE_BUILDERS:
+    """Add (or replace) a kind; returns the descriptor for chaining.
+
+    ``analysis.certificate`` must name a descriptor in the certificate
+    registry (``core.certs``) — the kind's declared default, which every
+    substrate resolves through that registry."""
+    if analysis.certificate not in certificate_names():
         raise ValueError(
             f"unknown certificate type {analysis.certificate!r}; choose "
-            f"from {tuple(CERTIFICATE_BUILDERS)}")
+            f"from {certificate_names()}")
     _REGISTRY[analysis.kind] = analysis
     return analysis
 
@@ -126,8 +133,8 @@ def get_analysis(kind: str) -> Analysis:
 
 def certificate_fn(certificate: str) -> Callable:
     """The certificate builder an analysis runs on: (EdgeList, capacity) ->
-    EdgeList in a fixed 2(n−1)-slot buffer."""
-    return CERTIFICATE_BUILDERS[certificate]
+    EdgeList in a fixed 2(n−1)-slot buffer (resolved via ``core.certs``)."""
+    return get_certificate(certificate).build
 
 
 # ------------------------------------------------------- shared result glue

@@ -10,14 +10,14 @@ different machines/phases always have identical shapes.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import jax
 
 from repro.core.forest import (
     scan_first_forest_ex,
     spanning_forest,
     spanning_forest_ex,
 )
-from repro.graph.datastructs import EdgeList, compact_edges, concat_edges
+from repro.graph.datastructs import INT, EdgeList, compact_edges, concat_edges
 
 
 def certificate_capacity(n_nodes: int) -> int:
@@ -94,15 +94,83 @@ def sfs_certificate_ex(edges: EdgeList, capacity: int | None = None):
     return cert, parent, level, (r1, r2)
 
 
-#: certificate type -> builder (EdgeList, capacity=...) -> EdgeList.
-#: "2ec" preserves min(λ(x,y), 2) — bridges, 2ECC, bridge tree; "sfs"
-#: additionally preserves vertex connectivity up to 2 — articulation
-#: points and biconnected blocks. The connectivity analysis registry
-#: (repro.connectivity.registry) keys each query kind to one of these.
-CERTIFICATE_BUILDERS = {
-    "2ec": sparse_certificate,
-    "sfs": sfs_certificate,
-}
+def hybrid_certificate(edges: EdgeList, capacity: int | None = None) -> EdgeList:
+    """Hybrid Borůvka⊕SFS certificate for sparse, path-like worlds.
+
+    The plain SFS certificate pays one BFS round per layer — O(diameter),
+    which is exactly wrong on long induced paths. The hybrid bounds the
+    scanned diameter by handling degree-≤2 chains combinatorially first:
+
+      1. **Chain edges** — every edge incident to a vertex of (masked,
+         multiplicity-counted) degree ≤ 2 goes into the certificate
+         verbatim. Such edges are ≤ 2 per low-degree vertex, so this part
+         never exceeds 2·|{deg ≤ 2}| slots.
+      2. **Contract** — the edges whose BOTH endpoints have degree ≤ 2 (the
+         chain interiors) are Borůvka-hooked (``spanning_forest_ex``,
+         O(log n) rounds) and each chain component collapses to one label;
+         high-degree vertices keep their own labels. A maximal chain thus
+         becomes a length-2 virtual path u–c–v between its attachment
+         vertices — subdivision, not smoothing, so parallel attachments
+         stay distinguishable.
+      3. **Scan** — the scan-first pair F1 ∪ F2 is built on the RELABELED
+         buffer (same slots, contracted endpoints, interiors masked off).
+         Its BFS rounds are O(diameter of the contracted graph): chains of
+         any length cost one hop.
+      4. **Re-expand** — selection maps back slot-for-slot; the output is
+         chain ∪ F1 ∪ F2 compacted into the usual 2(n−1)-slot buffer
+         (|chain| ≤ 2s and |Fi ∩ non-chain| ≤ h−1 for s low-degree and h
+         high-degree vertices, so the bound is safe).
+
+    Validity (DESIGN.md §Certificate registry for the sketch): the
+    certificate keeps every chain edge, and its contracted image contains
+    an SFS pair of the contracted graph, so cut/block/bridge structure is
+    preserved on the contraction and lifts through the subdivision
+    equivalence. Same contract as ``sfs_certificate``: vertex connectivity
+    up to 2 always, edge connectivity up to 2 on simple inputs; composes
+    under union-then-recertify, so it rides every merge schedule.
+    """
+    cert, _ = hybrid_certificate_ex(edges, capacity=capacity)
+    return cert
+
+
+def hybrid_certificate_ex(edges: EdgeList, capacity: int | None = None):
+    """Hybrid certificate + per-pass round counts.
+
+    Returns ``(cert, (rounds_chain, rounds_f1, rounds_f2))`` where
+    ``rounds_chain`` counts the Borůvka hooking rounds of the chain
+    contraction and ``rounds_f1``/``rounds_f2`` the BFS rounds of the two
+    scan passes on the contracted buffer — the observable for "hybrid
+    bounds SFS depth on path-like worlds" (benchmarks/fig7
+    ``path_world_rounds``)."""
+    cap = certificate_capacity(edges.n_nodes) if capacity is None else capacity
+    n = edges.n_nodes
+    src, dst, mask = edges.src, edges.dst, edges.mask
+    valid = mask & (src != dst)
+    ones = valid.astype(INT)
+    deg = (jax.ops.segment_sum(ones, src, num_segments=n)
+           + jax.ops.segment_sum(ones, dst, num_segments=n))
+    low = deg <= 2
+    interior = valid & low[src] & low[dst]
+    chain = valid & (low[src] | low[dst])
+    _, labels, r_chain = spanning_forest_ex(
+        EdgeList(src, dst, interior, n))
+    csrc, cdst = labels[src], labels[dst]
+    contracted = valid & ~interior
+    f1, parent, _, _, r1 = scan_first_forest_ex(
+        EdgeList(csrc, cdst, contracted, n))
+    # F2 scans the simple complement of F1 in the CONTRACTED graph — the
+    # same multigraph rule as sfs_certificate_ex (parallel copies of an F1
+    # pair would waste forest slots F2 needs for real connectivity).
+    dup = (parent[csrc] == cdst) | (parent[cdst] == csrc)
+    f2, _, _, _, r2 = scan_first_forest_ex(
+        EdgeList(csrc, cdst, contracted & ~f1 & ~dup, n))
+    cert = compact_edges(edges, cap, keep=chain | f1 | f2)
+    return cert, (r_chain, r1, r2)
+
+
+# NOTE: the certificate-type table lives in the certificate registry
+# (repro.core.certs) — builders here are plain functions the registry's
+# descriptors reference; resolve by name via certs.certificate_builder.
 
 
 def merge_certificates_incremental(own: EdgeList, f1_labels, f2_labels,

@@ -20,11 +20,11 @@ Three schedules, all running on fixed 2(n−1)-slot certificate buffers:
 
 Certificate union is associative, commutative, and idempotent, which is what
 makes all three schedules compute the same final certificate. The phases are
-certificate-type-generic: the 2-edge Borůvka pair AND the scan-first-search
-pair (``core.certificate.CERTIFICATE_BUILDERS``) both compose under
-union-then-recertify, so ``build_distributed_analysis_fn`` serves EVERY kind
-in the analysis registry — each kind's merge phases exchange the certificate
-its descriptor declares safe (DESIGN.md §Analysis registry).
+certificate-type-generic: every type in the certificate registry
+(``core.certs``) composes under union-then-recertify, so
+``build_distributed_analysis_fn`` serves EVERY kind in the analysis
+registry — each kind's merge phases exchange the certificate its descriptor
+declares safe (or a per-call override; DESIGN.md §Certificate registry).
 """
 from __future__ import annotations
 
@@ -36,13 +36,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.certificate import (
-    CERTIFICATE_BUILDERS,
-    certificate_capacity,
-    merge_certificates_incremental,
-    sparse_certificate,
-    sparse_certificate_ex,
-)
+from repro.core.certificate import certificate_capacity, sparse_certificate
+from repro.core.certs import get_certificate
 from repro.graph.datastructs import (
     INT,
     EdgeList,
@@ -77,35 +72,22 @@ def _phase_perm(schedule: str, m: int, q: int):
     return [(i, i ^ stride) for i in range(m) if (i ^ stride) < m]
 
 
-def _merge_phases_one_axis(cert: EdgeList, axes, m: int, schedule: str,
-                           certify) -> EdgeList:
-    """Run log2(m) merge phases over one (possibly flattened) mesh axis."""
+def _merge_phases_one_axis(state: tuple, fold, n_nodes: int, axes, m: int,
+                           schedule: str) -> tuple:
+    """Run log2(m) merge phases over one (possibly flattened) mesh axis.
+
+    ``state`` is a certificate-registry state tuple (pair buffers first,
+    aux arrays after — core.certs). Only the pair is exchanged; aux state
+    (e.g. warm-start labels) stays machine-local, carried across phases by
+    ``fold``. Non-receivers get mask-False buffers from ppermute, so their
+    fold is a union no-op."""
     phases = max(int(math.ceil(math.log2(m))), 0)
     for q in range(phases):
         perm = _phase_perm(schedule, m, q)
-        recv = _ppermute_edges(cert, axes, perm)
-        # non-receivers get zeros => recv.mask all-False => union is a no-op
-        cert = certify(
-            concat_edges(cert, recv), capacity=certificate_capacity(cert.n_nodes)
-        )
-    return cert
-
-
-def _merge_phases_one_axis_inc(cert: EdgeList, lab1, lab2, axes, m: int,
-                               schedule: str):
-    """Incremental (warm-start) merge phases — see certificate.
-    merge_certificates_incremental. Per phase the two delta forest passes
-    scan only the RECEIVED 2(n-1)-slot buffer with labels carried across
-    phases, instead of re-certifying the 4(n-1) union from scratch."""
-    phases = max(int(math.ceil(math.log2(m))), 0)
-    for q in range(phases):
-        perm = _phase_perm(schedule, m, q)
-        recv = _ppermute_edges(cert, axes, perm)
-        # non-receivers get mask-False buffers => both deltas are no-ops
-        cert, lab1, lab2, _ = merge_certificates_incremental(
-            cert, lab1, lab2, recv
-        )
-    return cert, lab1, lab2
+        recv = _ppermute_edges(EdgeList(state[0], state[1], state[2],
+                                        n_nodes), axes, perm)
+        state = fold(state, recv)
+    return state
 
 
 def merged_certificate(local: EdgeList, mesh, machine_axes,
@@ -119,46 +101,46 @@ def merged_certificate(local: EdgeList, mesh, machine_axes,
     merges per axis, last-listed axis first (put the fastest axis last).
 
     ``merge``: ``recertify`` (paper-faithful re-certification of the union
-    each phase) or ``incremental`` (warm-start deltas — beyond-paper,
-    SPerf bridges iteration; identical output certificate semantics).
+    each phase) or ``incremental`` (warm-start state carried across phases
+    — beyond-paper, SPerf bridges iteration; identical output certificate
+    semantics). Only certificates whose descriptor declares ``warm_merge``
+    actually warm-start (the Borůvka labels); the rest re-certify the
+    union each phase, which is always valid.
 
-    ``certificate``: ``2ec`` (Borůvka pair) or ``sfs`` (scan-first pair,
-    serving the vertex-connectivity kinds). The warm-start labels are a
-    Borůvka-hooking primitive, so ``merge='incremental'`` falls back to
-    re-certification for ``sfs`` — BFS layers shift globally on union and
-    do not warm-start.
+    ``certificate``: any name in the certificate registry (``core.certs``)
+    — the phases exchange that type's pair and fold with its declared ops.
     """
-    certify = CERTIFICATE_BUILDERS[certificate]
+    cert_desc = get_certificate(certificate)
     cap = certificate_capacity(local.n_nodes)
-    if merge == "incremental" and certificate == "2ec":
-        cert, lab1, lab2, _ = sparse_certificate_ex(local, capacity=cap)
-        if schedule in ("paper", "xor"):
-            m = _axis_size(mesh, machine_axes)
-            cert, lab1, lab2 = _merge_phases_one_axis_inc(
-                cert, lab1, lab2, tuple(machine_axes), m, schedule
-            )
-        elif schedule == "hierarchical":
-            for ax in reversed(tuple(machine_axes)):
-                cert, lab1, lab2 = _merge_phases_one_axis_inc(
-                    cert, lab1, lab2, ax, mesh.shape[ax], "xor"
-                )
-        else:
-            raise ValueError(f"unknown schedule {schedule!r}")
-        return cert
     if merge not in ("recertify", "incremental"):
         raise ValueError(f"unknown merge mode {merge!r}")
-    cert = certify(local, capacity=cap)
-    if schedule in ("paper", "xor"):
-        m = _axis_size(mesh, machine_axes)
-        cert = _merge_phases_one_axis(cert, tuple(machine_axes), m, schedule,
-                                      certify)
-    elif schedule == "hierarchical":
-        for ax in reversed(tuple(machine_axes)):
-            cert = _merge_phases_one_axis(cert, ax, mesh.shape[ax], "xor",
-                                          certify)
-    else:
+    if schedule not in ("paper", "xor", "hierarchical"):
         raise ValueError(f"unknown schedule {schedule!r}")
-    return cert
+    warm = merge == "incremental" and cert_desc.warm_merge
+    if warm:
+        state = cert_desc.load_state(local, cap)
+
+        def fold(state, recv):
+            return cert_desc.fold_state(state, recv, cap)
+    else:
+        c = cert_desc.build(local, capacity=cap)
+        state = (c.src, c.dst, c.mask)
+
+        def fold(state, recv):
+            own = EdgeList(state[0], state[1], state[2], local.n_nodes)
+            c2 = cert_desc.build(concat_edges(own, recv), capacity=cap)
+            return c2.src, c2.dst, c2.mask
+
+    if schedule == "hierarchical":
+        for ax in reversed(tuple(machine_axes)):
+            state = _merge_phases_one_axis(state, fold, local.n_nodes, ax,
+                                           mesh.shape[ax], "xor")
+    else:
+        state = _merge_phases_one_axis(state, fold, local.n_nodes,
+                                       tuple(machine_axes),
+                                       _axis_size(mesh, machine_axes),
+                                       schedule)
+    return EdgeList(state[0], state[1], state[2], local.n_nodes)
 
 
 def build_distributed_analysis_fn(
@@ -170,6 +152,7 @@ def build_distributed_analysis_fn(
     merge: str = "recertify",
     kind: str = "bridges",
     with_deletions: bool = False,
+    certificate: str | None = None,
 ):
     """Return a jit-able fn: sharded (src, dst, mask)[M, cap] -> per-machine
     result buffers [M, ...] for ANY analysis-registry kind.
@@ -187,6 +170,11 @@ def build_distributed_analysis_fn(
     host by ``simulate_churn_host``). Keys are global (a failed link is a
     failed link on whichever machine holds copies of it), hence replicated
     rather than sharded.
+
+    ``certificate`` overrides the kind's declared certificate type for the
+    merge phases (default: ``analysis.certificate``); callers are expected
+    to have validated the override preserves what the kind needs
+    (``BridgeEngine`` does).
     """
     # Imported lazily: the registry builds on core's pipeline stages, so a
     # module-level import here would be circular (same rule as
@@ -195,6 +183,7 @@ def build_distributed_analysis_fn(
     from repro.connectivity.registry import get_analysis
 
     analysis = get_analysis(kind)
+    cert_name = certificate if certificate is not None else analysis.certificate
     axes = tuple(machine_axes) if not isinstance(machine_axes, str) else (machine_axes,)
     cert_cap = certificate_capacity(n_nodes)
     out_cap = max(n_nodes - 1, 1)
@@ -220,7 +209,7 @@ def build_distributed_analysis_fn(
             lmask, _ = tombstone_mask(psrc[0], pdst[0], lmask, *keys)
         local = EdgeList(psrc[0], pdst[0], lmask, n_nodes)
         cert = merged_certificate(local, mesh, axes, schedule, merge,
-                                  certificate=analysis.certificate)
+                                  certificate=cert_name)
         if final == "device":
             st = tour_state(cert.src, cert.dst, cert.mask, n_nodes)
             out = analysis.device_fn(cert.src, cert.dst, cert.mask, n_nodes,

@@ -127,7 +127,8 @@ _batched_tombstone = jax.jit(jax.vmap(tombstone_mask))
 
 def make_analysis_fn(n_nodes: int, kind: str = "bridges",
                      final: str = "device", on_trace=None,
-                     with_delete: bool = False):
+                     with_delete: bool = False,
+                     certificate: str | None = None):
     """The un-vmapped query core for one analysis kind, registry-driven.
 
     ``(src, dst, mask) ->`` the kind's declared device buffers (see
@@ -149,13 +150,20 @@ def make_analysis_fn(n_nodes: int, kind: str = "bridges",
     three extra ``(ksrc, kdst, kmask)`` deletion-key buffers and answers
     on the graph minus every matched pair (DESIGN.md §Decremental) — the
     one-shot spelling of deletion, on every substrate.
+
+    ``certificate`` overrides the kind's declared certificate type
+    (resolved via the certificate registry, ``core.certs``); it only
+    matters where a certificate is actually built — ``final='host'`` and
+    the ``device_input='certificate'`` kinds. Callers are expected to have
+    validated the override (``BridgeEngine`` does).
     """
     analysis = get_analysis(kind)
     if final not in ("device", "host"):
         raise ValueError(f"unknown final stage {final!r}")
     cert_cap = certificate_capacity(n_nodes)
     out_cap = max(n_nodes - 1, 1)
-    certify = certificate_fn(analysis.certificate)
+    certify = certificate_fn(certificate if certificate is not None
+                             else analysis.certificate)
 
     def one(src, dst, mask, *keys):
         if on_trace is not None:
@@ -180,7 +188,9 @@ def make_query_fn(n_nodes: int, final: str = "device", on_trace=None):
 
 
 def make_batched_pipeline(n_nodes: int, final: str = "device", on_trace=None,
-                          kind: str = "bridges", with_delete: bool = False):
+                          kind: str = "bridges", with_delete: bool = False,
+                          certificate: str | None = None):
     """jit(vmap(one-graph analysis)) over the leading batch axis."""
     return jax.jit(jax.vmap(make_analysis_fn(n_nodes, kind, final, on_trace,
-                                             with_delete=with_delete)))
+                                             with_delete=with_delete,
+                                             certificate=certificate)))

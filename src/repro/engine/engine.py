@@ -24,23 +24,33 @@ that into the three properties a query-serving deployment needs:
   on every substrate — single-device, batched, distributed, incremental
   (DESIGN.md §Analysis registry).
 
-* **incremental** — ``load`` computes the live Borůvka 2-edge certificate
-  with warm-start labels; the scan-first-search pair that additionally
-  preserves vertex cuts is materialized lazily on the first cuts/bcc
-  query and maintained per delta from then on, so 2-edge-only serving
-  keeps the PR 1 update cost. ``insert_edges`` folds an edge delta into
-  the live state and re-runs only the final analysis stage, never the
-  full pipeline.
+* **multi-certificate** — the certificate stage dispatches the same way:
+  the engine holds a generic ``dict[certificate name, state]`` of live
+  pairs and drives materialize / insert fold-in / delete-rebuild entirely
+  through the certificate registry (``core.certs``). Lazily-declared
+  certificates (sfs, hybrid) are only computed on the first query that
+  resolves to them; ``certificate=`` overrides the kind's default with
+  any registered type that preserves what the kind needs (DESIGN.md
+  §Certificate registry). The engine contains ZERO certificate-specific
+  code — registering a new ``Certificate`` makes it servable on every
+  substrate with no engine edits.
+
+* **incremental** — ``load`` computes the eager certificates (the
+  warm-start Borůvka 2-edge pair) now and leaves the lazy ones
+  unmaterialized, so 2-edge-only serving keeps the PR 1 update cost.
+  ``insert_edges`` folds an edge delta into every LIVE certificate state
+  via its registered fold-in and re-runs only the final analysis stage,
+  never the full pipeline.
 
 * **decremental** — ``delete_edges`` serves edge deletions (link failures —
   the paper's workload) from the same live state. Deletions are a
   compile-once tombstone pass over the live full edge buffer ((min, max)
   key match, shape-bucketed like every other program), followed by the
-  certificate-hit rule: if no deleted edge sits in a live certificate the
-  certificate is untouched and serving stays warm (the common dense-graph
-  case — certificates hold ≤ 2(n−1) of the E edges); if a certificate
-  edge dies, that certificate pair is rebuilt from the surviving buffer
-  through the already-cached ``load``/``sfs_load`` programs
+  certificate-hit rule, one registry-driven loop over the live
+  certificates: a certificate none of whose edges died is untouched and
+  serving stays warm (the common dense-graph case — certificates hold
+  ≤ 2(n−1) of the E edges); a certificate that lost an edge is rebuilt
+  from the surviving buffer through its already-cached load program
   (DESIGN.md §Decremental).
 
 Bucketing the vertex count is sound because every stage treats the extra
@@ -59,11 +69,11 @@ import numpy as np
 
 from repro.connectivity.common import tour_state
 from repro.connectivity.registry import get_analysis
-from repro.core.certificate import (
-    certificate_capacity,
-    merge_certificates_incremental,
-    sfs_certificate,
-    sparse_certificate_ex,
+from repro.core.certificate import certificate_capacity
+from repro.core.certs import (
+    certificate_names,
+    get_certificate,
+    primary_certificate,
 )
 from repro.engine.batched import (
     BatchedEdgeList,
@@ -118,7 +128,8 @@ class BridgeEngine:
     """
 
     def __init__(self, *, mesh=None, machine_axes=None, schedule: str = "paper",
-                 merge: str = "recertify", min_bucket: int = 16):
+                 merge: str = "recertify", min_bucket: int = 16,
+                 certificate: str | None = None):
         self.mesh = mesh
         if mesh is not None and machine_axes is None:
             machine_axes = tuple(mesh.axis_names)
@@ -128,10 +139,58 @@ class BridgeEngine:
         self.schedule = schedule
         self.merge = merge
         self.min_bucket = min_bucket
+        # engine-wide certificate preference: "auto"/None = each kind's
+        # declared default; a name = use it wherever it preserves what the
+        # kind needs, fall back to the default elsewhere (per-call
+        # ``certificate=`` overrides are strict instead: see
+        # ``_resolve_certificate``).
+        if certificate in (None, "auto"):
+            self.certificate = None
+        else:
+            self.certificate = get_certificate(certificate).name
         self.backend = jax.default_backend()
         self.stats = EngineStats()
         self._programs: dict[tuple, object] = {}
         self._live: dict | None = None
+
+    def _resolve_certificate(self, analysis, override: str | None = None) -> str:
+        """The certificate serving ``analysis``: its declared default,
+        unless a per-call ``override`` (strict — ValueError if it does not
+        preserve what the kind's default does) or the engine-wide
+        preference (permissive — falls back to the default where the kind
+        cannot ride it) picks another registered type."""
+        default = get_certificate(analysis.certificate)
+        if override is not None:
+            cert = get_certificate(override)
+            if not cert.preserves >= default.preserves:
+                raise ValueError(
+                    f"certificate {cert.name!r} does not preserve "
+                    f"{sorted(default.preserves - cert.preserves)} required "
+                    f"by kind {analysis.kind!r} (declared certificate "
+                    f"{default.name!r})")
+            return cert.name
+        if self.certificate is not None:
+            cert = get_certificate(self.certificate)
+            if cert.preserves >= default.preserves:
+                return cert.name
+        return default.name
+
+    def certificate_for(self, kind: str) -> str:
+        """The certificate name queries for ``kind`` resolve to under this
+        engine's configuration (serving dashboards report this)."""
+        return self._resolve_certificate(get_analysis(kind))
+
+    def _program_certificate(self, analysis, final: str,
+                             override: str | None) -> str | None:
+        """Certificate component of a one-shot program's cache key: the
+        resolved name where the program builds a certificate (final='host'
+        or a ``device_input='certificate'`` kind), else None so programs
+        that never build one are shared across certificate choices.
+        Overrides are validated either way."""
+        cert_name = self._resolve_certificate(analysis, override)
+        if final != "host" and analysis.device_input != "certificate":
+            return None
+        return cert_name
 
     # ------------------------------------------------------------------ cache
     def _program(self, key: tuple, build):
@@ -168,13 +227,16 @@ class BridgeEngine:
 
     # ---------------------------------------------------------- single device
     def _build_single(self, n_bucket: int, kind: str, final: str,
-                      with_delete: bool = False):
+                      with_delete: bool = False,
+                      certificate: str | None = None):
         return jax.jit(make_analysis_fn(n_bucket, kind, final,
                                         self._tick_trace,
-                                        with_delete=with_delete))
+                                        with_delete=with_delete,
+                                        certificate=certificate))
 
     def analyze(self, src, dst, n_nodes: int, *, kind: str = "bridges",
-                final: str = "device", seed: int = 0, delete=None):
+                final: str = "device", seed: int = 0, delete=None,
+                certificate: str | None = None):
         """One graph, one analysis kind; compile-once per shape bucket.
 
         kind='bridges'     -> set[(u, v)] bridge pairs
@@ -194,13 +256,21 @@ class BridgeEngine:
         the edges). Works on the distributed substrate too — keys are
         replicated and each machine tombstones its own shard before the
         certificate/merge phases.
+
+        ``certificate`` overrides the kind's declared certificate type
+        with any registered type that preserves what the kind needs
+        (``core.certs``; ValueError otherwise). One-shot device queries
+        for the ``device_input='full'`` kinds never build a certificate,
+        so the override only affects ``final='host'``, the certificate
+        kinds, and the distributed merge phases.
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
         if self.mesh is not None:
             return self._analyze_distributed(src, dst, n_nodes, kind=kind,
                                              final=final, seed=seed,
-                                             delete=delete)
+                                             delete=delete,
+                                             certificate=certificate)
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         n_bucket = self._bucket(n_nodes)
@@ -211,11 +281,13 @@ class BridgeEngine:
         if delete is not None:
             kel, kcap = self._delete_keys(delete, n_bucket)
             args += (kel.src, kel.dst, kel.mask)
+        cert_name = self._program_certificate(analysis, final, certificate)
         key = ("single", kind, final, n_bucket, cap, kcap, self.backend,
-               None)
+               cert_name)
         fn = self._program(
             key, lambda: self._build_single(n_bucket, kind, final,
-                                            with_delete=kcap is not None))
+                                            with_delete=kcap is not None,
+                                            certificate=cert_name))
         out = fn(*args)
         if final == "host":
             return analysis.host_fn(*_masked_arrays(out), n_nodes)
@@ -245,7 +317,8 @@ class BridgeEngine:
 
     # ----------------------------------------------------------------- batched
     def analyze_batch(self, graphs, n_nodes, *, kind: str = "bridges",
-                      final: str = "device", delete=None) -> list:
+                      final: str = "device", delete=None,
+                      certificate: str | None = None) -> list:
         """Resolve B independent graphs in ONE device dispatch.
 
         ``graphs``: iterable of (src, dst) pairs. ``n_nodes``: shared vertex
@@ -255,6 +328,9 @@ class BridgeEngine:
         ``delete``: optional per-graph deletion-key lists — ``(ksrc, kdst)``
         or ``None`` per graph — applied as a vmapped tombstone pass inside
         the same dispatch (each graph answers minus its own failed links).
+
+        ``certificate``: as in ``analyze`` — a validated override of the
+        kind's declared certificate type, where one is built.
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
@@ -288,14 +364,16 @@ class BridgeEngine:
             kel = BatchedEdgeList.from_graphs(keys, n_bucket, capacity=kcap,
                                               batch_pad=b_bucket)
             args += (kel.src, kel.dst, kel.mask)
+        cert_name = self._program_certificate(analysis, final, certificate)
         key = ("batch", kind, final, n_bucket, cap, b_bucket, kcap,
-               self.backend, None)
+               self.backend, cert_name)
         fn = self._program(
             key,
             lambda: make_batched_pipeline(n_bucket, final=final,
                                           on_trace=self._tick_trace,
                                           kind=kind,
-                                          with_delete=kcap is not None),
+                                          with_delete=kcap is not None,
+                                          certificate=cert_name),
         )
         out_dev = fn(*args)
         stacked = (tuple(np.asarray(x) for x in out_dev)
@@ -336,53 +414,45 @@ class BridgeEngine:
         return self.analyze_batch(graphs, n_nodes, kind="bcc")
 
     # ------------------------------------------------------------- incremental
-    def _build_load(self, n_bucket: int):
+    def _build_cert_load(self, name: str, n_bucket: int):
+        """Program for one certificate type's ``load_state``: (src, dst,
+        mask) buffer -> live state tuple. ONE program per (certificate,
+        buffer bucket) serves the initial load, the lazy materialization,
+        and the decremental certificate-hit rebuild — the registered
+        ``load_state`` IS the rebuild program factory."""
+        desc = get_certificate(name)
         cert_cap = certificate_capacity(n_bucket)
 
         def run(src, dst, mask):
             self._tick_trace()
-            el = EdgeList(src, dst, mask, n_bucket)
-            cert, lab1, lab2, _ = sparse_certificate_ex(el, capacity=cert_cap)
-            return cert.src, cert.dst, cert.mask, lab1, lab2
+            return desc.load_state(EdgeList(src, dst, mask, n_bucket),
+                                   cert_cap)
 
         return jax.jit(run)
 
-    def _build_insert(self, n_bucket: int):
-        def run(cs, cd, cm, lab1, lab2, rs, rd, rm):
-            self._tick_trace()
-            own = EdgeList(cs, cd, cm, n_bucket)
-            recv = EdgeList(rs, rd, rm, n_bucket)
-            cert, lab1, lab2, _ = merge_certificates_incremental(
-                own, lab1, lab2, recv)
-            return cert.src, cert.dst, cert.mask, lab1, lab2
+    def _cert_load(self, name: str, n_bucket: int, buffers) -> tuple:
+        """Run the cached load/rebuild program for ``name`` on an edge
+        buffer's shape bucket; returns the live state tuple."""
+        s, d, m = buffers
+        key = ("cert_load", name, n_bucket, s.shape[0], self.backend, None)
+        fn = self._program(key,
+                           lambda: self._build_cert_load(name, n_bucket))
+        return tuple(fn(s, d, m))
 
-        return jax.jit(run)
-
-    def _build_insert_sfs(self, n_bucket: int):
-        """Delta fold-in for the live SFS pair. BFS layers shift globally
-        under union, so there is no warm start — but re-scanning the
-        bounded cert ∪ delta buffer keeps the update O(n + Δ), never O(E),
-        with the same shape every call."""
+    def _build_cert_insert(self, name: str, n_bucket: int):
+        """Program for one certificate type's ``fold_state``: live state +
+        delta buffer -> updated state. For the warm-start Borůvka pair the
+        fold scans only the delta; for the rescan certificates (sfs,
+        hybrid) it re-certifies the bounded cert ∪ delta union — O(n + Δ)
+        either way, never O(E), with the same shape every call."""
+        desc = get_certificate(name)
         cert_cap = certificate_capacity(n_bucket)
 
-        def run(ss, sd, sm, rs, rd, rm):
+        def run(*args):
             self._tick_trace()
-            scert = sfs_certificate(
-                concat_edges(EdgeList(ss, sd, sm, n_bucket),
-                             EdgeList(rs, rd, rm, n_bucket)),
-                capacity=cert_cap)
-            return scert.src, scert.dst, scert.mask
-
-        return jax.jit(run)
-
-    def _build_sfs_load(self, n_bucket: int):
-        cert_cap = certificate_capacity(n_bucket)
-
-        def run(src, dst, mask):
-            self._tick_trace()
-            scert = sfs_certificate(EdgeList(src, dst, mask, n_bucket),
-                                    capacity=cert_cap)
-            return scert.src, scert.dst, scert.mask
+            state, (rs, rd, rm) = args[:-3], args[-3:]
+            return desc.fold_state(state, EdgeList(rs, rd, rm, n_bucket),
+                                   cert_cap)
 
         return jax.jit(run)
 
@@ -421,21 +491,20 @@ class BridgeEngine:
         fn = self._program(key, lambda: self._build_delete())
         return fn(s, d, m, keys.src, keys.dst, keys.mask)
 
-    def _materialize_sfs(self) -> tuple:
-        """Lazy second certificate: the scan-first-search pair is only
-        computed (from the live full buffer) on the FIRST
-        vertex-connectivity query, so 2-edge-only incremental workloads
-        never pay the BFS passes. Once live it is maintained on device per
-        delta (and rebuilt from the full buffer when a deletion kills one
-        of its edges)."""
+    def _materialize(self, name: str) -> tuple:
+        """Lazy certificates (``Certificate.lazy``, e.g. the scan-first and
+        hybrid pairs) are only computed — from the live full buffer — on
+        the FIRST query that resolves to them, so workloads that never ask
+        never pay their passes. Once live a state is maintained on device
+        per delta (and rebuilt from the full buffer when a deletion kills
+        one of its edges)."""
         live = self._live
-        if live["sfs"] is None:
-            fs, fd, fm = live["full"]
-            n_bucket = live["n_bucket"]
-            key = ("sfs_load", n_bucket, fs.shape[0], self.backend, None)
-            fn = self._program(key, lambda: self._build_sfs_load(n_bucket))
-            live["sfs"] = tuple(fn(fs, fd, fm))
-        return live["sfs"]
+        state = live["certs"].get(name)
+        if state is None:
+            state = live["certs"][name] = self._cert_load(
+                name, live["n_bucket"], live["full"])
+            live["rebuilds"].setdefault(name, 0)
+        return state
 
     def _build_final(self, n_bucket: int, kind: str):
         """Final analysis stage over the kind's live certificate."""
@@ -450,13 +519,13 @@ class BridgeEngine:
         return jax.jit(run)
 
     def load(self, src, dst, n_nodes: int) -> "BridgeEngine":
-        """Set the engine's live graph: the warm-start Borůvka certificate
-        pair, computed now, plus a lazily-materialized scan-first-search
-        pair for the vertex-connectivity kinds (see ``_materialize_sfs`` —
-        2-edge-only serving pays nothing for it). The full edge buffer
-        stays resident on device: it is the tombstone target for
-        ``delete_edges`` and the rebuild source when a deletion kills a
-        certificate edge."""
+        """Set the engine's live graph: every EAGER certificate in the
+        registry (the warm-start Borůvka pair) is computed now; lazy ones
+        (sfs, hybrid) wait for the first query that resolves to them
+        (``_materialize`` — workloads that never ask pay nothing). The
+        full edge buffer stays resident on device: it is the tombstone
+        target for ``delete_edges`` and the rebuild source when a deletion
+        kills a certificate edge."""
         if self.mesh is not None:
             raise NotImplementedError(
                 "incremental updates are single-device; use mesh=None")
@@ -465,23 +534,27 @@ class BridgeEngine:
         n_bucket = self._bucket(n_nodes)
         cap = self._bucket(max(len(src), 1))
         el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        key = ("load", n_bucket, cap, self.backend, None)
-        fn = self._program(key, lambda: self._build_load(n_bucket))
-        cs, cd, cm, lab1, lab2 = fn(el.src, el.dst, el.mask)
+        full = (el.src, el.dst, el.mask)
         self._live = {
-            "2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2,
-            "sfs": None, "full": (el.src, el.dst, el.mask),
-            "count": len(src), "rebuilds": {"2ec": 0, "sfs": 0},
+            "certs": {}, "rebuilds": {}, "full": full,
+            "count": len(src),
             "n_nodes": int(n_nodes), "n_bucket": n_bucket,
         }
+        for name in certificate_names():
+            if get_certificate(name).lazy:
+                self._live["certs"][name] = None
+            else:
+                self._materialize(name)
         return self
 
     @property
     def num_live_edges(self) -> int:
-        """Edge count of the live 2-edge certificate (<= 2(n-1), Lemma 1)."""
+        """Edge count of the live primary certificate — the eager 2-edge
+        pair (<= 2(n-1), Lemma 1)."""
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
-        return int(np.asarray(self._live["2ec"][2]).sum())
+        return int(np.asarray(
+            self._live["certs"][primary_certificate()][2]).sum())
 
     @property
     def num_live_graph_edges(self) -> int:
@@ -494,31 +567,31 @@ class BridgeEngine:
     @property
     def live_rebuilds(self) -> dict:
         """Per-certificate rebuild counts caused by certificate-hit
-        deletions ({'2ec': int, 'sfs': int}) — the observable for 'most
-        deletions are free' (DESIGN.md §Decremental)."""
+        deletions, one entry per MATERIALIZED certificate (e.g.
+        ``{'2ec': 0, 'sfs': 1}``) — the observable for 'most deletions are
+        free' (DESIGN.md §Decremental)."""
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         return dict(self._live["rebuilds"])
 
     def insert_edges(self, src, dst, *, final: str = "device",
-                     kind: str = "bridges"):
+                     kind: str = "bridges", certificate: str | None = None):
         """Fold an edge delta into the live certificates, return the updated
         analysis for ANY registry kind (see ``current_analysis``).
 
-        The 2-edge pair updates via the warm-start
-        ``merge_certificates_incremental`` (two delta forest passes
-        scanning only the delta buffer — the PR 1/PR 2 hot path,
-        unchanged). The scan-first-search pair — what makes
-        ``kind='cuts'`` and ``'bcc'`` serveable incrementally, since the
-        2-edge-only live state provably does not preserve vertex cuts
-        (DESIGN.md §Connectivity counterexample, pinned as a regression
-        test) — updates by re-scanning the bounded cert ∪ delta buffer,
-        but only once some vertex-connectivity query has materialized it;
-        until then its BFS passes cost nothing (the first such query
-        builds it from the live full buffer, ``_materialize_sfs``). The
-        delta is also compact-appended into the device-resident full
-        buffer — the ``delete_edges`` tombstone target and rebuild source
-        (DESIGN.md §Decremental). The full pipeline is never re-run.
+        One registry-driven loop folds the delta into every MATERIALIZED
+        certificate state via its registered ``fold_state`` program: the
+        2-edge pair's warm-start labels scan only the delta buffer (the
+        PR 1/PR 2 hot path, unchanged), while the rescan certificates
+        (sfs, hybrid) — what make ``kind='cuts'`` and ``'bcc'`` serveable
+        incrementally, since the 2-edge-only live state provably does not
+        preserve vertex cuts (DESIGN.md §Connectivity counterexample,
+        pinned as a regression test) — re-certify the bounded cert ∪ delta
+        union. Unmaterialized lazy certificates cost nothing until the
+        first query that resolves to them (``_materialize``). The delta is
+        also compact-appended into the device-resident full buffer — the
+        ``delete_edges`` tombstone target and rebuild source (DESIGN.md
+        §Decremental). The full pipeline is never re-run.
         """
         kind = normalize_kind(kind)
         if self._live is None:
@@ -529,19 +602,16 @@ class BridgeEngine:
         dst = np.asarray(dst, np.int32)
         delta_cap = self._bucket(max(len(src), 1))
         recv = EdgeList.from_arrays(src, dst, n_bucket, capacity=delta_cap)
-        key = ("insert", n_bucket, delta_cap, self.backend, None)
-        fn = self._program(key, lambda: self._build_insert(n_bucket))
-        cs, cd, cm, lab1, lab2 = fn(
-            *live["2ec"], live["lab1"], live["lab2"],
-            recv.src, recv.dst, recv.mask,
-        )
-        live.update({"2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2})
-        if live["sfs"] is not None:
-            skey = ("insert_sfs", n_bucket, delta_cap, self.backend, None)
-            sfn = self._program(
-                skey, lambda: self._build_insert_sfs(n_bucket))
-            live["sfs"] = tuple(sfn(*live["sfs"],
-                                    recv.src, recv.dst, recv.mask))
+        for name, state in live["certs"].items():
+            if state is None:
+                continue
+            key = ("cert_insert", name, n_bucket, delta_cap, self.backend,
+                   None)
+            fn = self._program(
+                key,
+                lambda name=name: self._build_cert_insert(name, n_bucket))
+            live["certs"][name] = tuple(fn(*state, recv.src, recv.dst,
+                                           recv.mask))
         # Keep the live FULL buffer current: compact-append the delta,
         # reclaiming tombstoned holes. The edge count is tracked on host so
         # the output bucket (and thus a possible grow-retrace) is a static
@@ -556,10 +626,11 @@ class BridgeEngine:
             akey, lambda: self._build_append(n_bucket, out_cap))
         live["full"] = tuple(afn(fs, fd, fm, recv.src, recv.dst, recv.mask))
         live["count"] = needed
-        return self.current_analysis(kind=kind, final=final)
+        return self.current_analysis(kind=kind, final=final,
+                                     certificate=certificate)
 
     def delete_edges(self, src, dst, *, final: str = "device",
-                     kind: str = "bridges"):
+                     kind: str = "bridges", certificate: str | None = None):
         """Serve edge DELETIONS (link failures) from the live state, return
         the updated analysis for ANY registry kind (``current_analysis``).
 
@@ -570,23 +641,25 @@ class BridgeEngine:
         1. **Tombstone** the live full buffer: one cached program per
            (buffer bucket, key bucket) masks out matches in place — the
            buffer keeps its shape, so churn never recompiles.
-        2. **Certificate-hit rule**: probe each live certificate with the
-           same tombstone program. A certificate whose edges all survive
-           is still a valid sparse certificate of the smaller graph (its
+        2. **Certificate-hit rule**, one registry-driven loop over the
+           MATERIALIZED certificates: probe each live pair with the same
+           tombstone program. A certificate whose edges all survive is
+           still a valid sparse certificate of the smaller graph (its
            forests are still spanning: deleting a non-forest edge cannot
            disconnect what the forests connect), so serving continues
            warm — the common dense-graph case, since certificates hold
-           ≤ 2(n−1) of the E live edges. If a certificate edge dies, that
-           pair is rebuilt from the surviving full buffer through the
-           already-cached ``load``/``sfs_load`` programs (no new kernels,
-           no retrace after warm-up).
+           ≤ 2(n−1) of the E live edges. A certificate that lost an edge
+           is rebuilt from the surviving full buffer through its
+           already-cached ``load_state`` program (no new kernels, no
+           retrace after warm-up); ``live_rebuilds`` counts the hits per
+           certificate name.
 
         The removed-count and per-certificate hit counts are the only host
         syncs in the delete path (the rebuild decision is host-side control
-        flow): one small scalar readback per probed buffer, up to three
-        per delete. Fusing them into one probe program is a possible
-        future micro-optimization; the counters gate in
-        ``scripts/check_bench.py`` pins today's program structure.
+        flow): one small scalar readback per probed buffer — the full
+        buffer plus one per live certificate. Fusing them into one probe
+        program is a possible future micro-optimization; the counters gate
+        in ``scripts/check_bench.py`` pins today's program structure.
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
@@ -611,39 +684,37 @@ class BridgeEngine:
         live["full"] = (fs, fd, fm)
         live["count"] -= int(removed)
 
-        _, hit2ec = self._delete_pass(live["2ec"], keys)
-        if int(hit2ec):
-            live["rebuilds"]["2ec"] += 1
-            lkey = ("load", n_bucket, fs.shape[0], self.backend, None)
-            lfn = self._program(lkey, lambda: self._build_load(n_bucket))
-            cs, cd, cm, lab1, lab2 = lfn(fs, fd, fm)
-            live.update({"2ec": (cs, cd, cm), "lab1": lab1, "lab2": lab2})
-        if live["sfs"] is not None:
-            _, hitsfs = self._delete_pass(live["sfs"], keys)
-            if int(hitsfs):
-                live["rebuilds"]["sfs"] += 1
-                skey = ("sfs_load", n_bucket, fs.shape[0], self.backend,
-                        None)
-                sfn = self._program(
-                    skey, lambda: self._build_sfs_load(n_bucket))
-                live["sfs"] = tuple(sfn(fs, fd, fm))
-        return self.current_analysis(kind=kind, final=final)
+        for name, state in live["certs"].items():
+            if state is None:
+                continue
+            _, hits = self._delete_pass(state[:3], keys)
+            if int(hits):
+                live["rebuilds"][name] += 1
+                live["certs"][name] = self._cert_load(name, n_bucket,
+                                                      live["full"])
+        return self.current_analysis(kind=kind, final=final,
+                                     certificate=certificate)
 
     def current_analysis(self, kind: str = "bridges", *,
-                         final: str = "device"):
+                         final: str = "device",
+                         certificate: str | None = None):
         """Analysis of the live graph (final stage only; no certificate
         recomputation). Serves EVERY registry kind straight off the live
-        certificate the kind declares safe — 2-edge kinds from the Borůvka
-        pair, vertex-connectivity kinds (cuts, bcc) from the scan-first
-        pair (DESIGN.md §Analysis registry).
+        state of the certificate the kind resolves to — its declared
+        default (2-edge kinds: the Borůvka pair; vertex kinds: the
+        scan-first pair), or any registered override that preserves what
+        the kind needs, e.g. ``certificate='hybrid'`` for cuts/bcc on
+        sparse worlds (DESIGN.md §Certificate registry). The resolved
+        certificate is materialized from the live full buffer on first
+        use.
         """
         analysis = get_analysis(kind)
         kind = analysis.kind
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
-        cert = (self._materialize_sfs() if analysis.certificate == "sfs"
-                else live["2ec"])
+        cert = self._materialize(
+            self._resolve_certificate(analysis, certificate))[:3]
         if final == "host":
             s, d, m = (np.asarray(x) for x in cert)
             return analysis.host_fn(s[m], d[m], live["n_nodes"])
@@ -662,20 +733,23 @@ class BridgeEngine:
         return math.prod(self.mesh.shape[a] for a in self.machine_axes)
 
     def _build_distributed(self, n_nodes: int, kind: str, final: str,
-                           with_delete: bool = False):
+                           with_delete: bool = False,
+                           certificate: str | None = None):
         from repro.core.merge import build_distributed_analysis_fn
 
         fn = build_distributed_analysis_fn(
             self.mesh, self.machine_axes, n_nodes, schedule=self.schedule,
             final=final, merge=self.merge, kind=kind,
-            with_deletions=with_delete)
+            with_deletions=with_delete, certificate=certificate)
         return jax.jit(fn)
 
     def _analyze_distributed(self, src, dst, n_nodes: int, *, kind: str,
-                             final: str, seed: int, delete=None):
+                             final: str, seed: int, delete=None,
+                             certificate: str | None = None):
         from repro.core.partition import partition_edges
 
         analysis = get_analysis(kind)
+        cert_name = self._resolve_certificate(analysis, certificate)
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         m = self._machines()
@@ -694,10 +768,11 @@ class BridgeEngine:
             kel, kcap = self._delete_keys(delete, n_nodes)
             args += (kel.src, kel.dst, kel.mask)
         key = ("dist", kind, n_nodes, shard_cap, kcap, self.backend,
-               self.schedule, final, self.merge)
+               self.schedule, final, self.merge, cert_name)
         fn = self._program(
             key, lambda: self._build_distributed(n_nodes, kind, final,
-                                                 with_delete=kcap is not None))
+                                                 with_delete=kcap is not None,
+                                                 certificate=cert_name))
         with jax.set_mesh(self.mesh):
             out = fn(*args)
         # machine 0 (paper) — or any machine under xor/hierarchical — answers

@@ -1,10 +1,10 @@
+from repro.graph import generators
 from repro.graph.datastructs import (
     EdgeList,
     bucket_capacity,
     compact_edges,
     pad_edges,
 )
-from repro.graph import generators
 
 __all__ = ["EdgeList", "bucket_capacity", "compact_edges", "pad_edges",
            "generators"]

@@ -19,6 +19,13 @@ serving story end to end; the report then also carries the deletion count
 and per-certificate rebuild counters (most deletions never touch a
 certificate and are free, DESIGN.md §Decremental).
 
+``--certificate {2ec,sfs,hybrid,auto}`` picks the certificate preference:
+each kind is served from the requested type wherever it preserves what the
+kind needs (e.g. ``hybrid`` serves cuts/bcc; bridges falls back to its
+declared ``2ec``), and the report/JSON carry per-kind served certificates
+plus a per-CERTIFICATE qps + rebuild-counter rollup (DESIGN.md
+§Certificate registry).
+
     PYTHONPATH=src python -m repro.launch.serve_bridges --smoke
     PYTHONPATH=src python -m repro.launch.serve_bridges \
         --analysis all --batch 8 --queries 64 --n 512 --edges 8192 \
@@ -33,20 +40,25 @@ import time
 import numpy as np
 
 from repro.connectivity.registry import analysis_kinds, get_analysis
+from repro.core.certs import certificate_names
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
 
 #: CLI spellings: canonical kinds, with '-' aliases for the shell
 KINDS = tuple(k.replace("_", "-") for k in analysis_kinds())
 
+#: certificate choices: every registered type plus 'auto' (kind defaults)
+CERTS = tuple(certificate_names()) + ("auto",)
 
-def substrates(kind: str) -> dict:
+
+def substrates(kind: str, engine: BridgeEngine | None = None) -> dict:
     """The kind's row of the substrate matrix (DESIGN.md §Analysis
     registry): every registry kind serves single/batched/distributed; the
-    incremental column and the certificate the merge schedules exchange
-    come from the descriptor."""
+    incremental column and the declared certificate come from the
+    descriptor. With an ``engine``, also the certificate the engine's
+    ``--certificate`` preference actually resolves this kind to."""
     a = get_analysis(kind)
-    return {
+    row = {
         "certificate": a.certificate,
         "single": True,
         "batched": True,
@@ -54,6 +66,9 @@ def substrates(kind: str) -> dict:
         "decremental": a.decremental,
         "distributed": True,
     }
+    if engine is not None:
+        row["served_certificate"] = engine.certificate_for(kind)
+    return row
 
 
 def _drop_pairs(all_s, all_d, ks, kd):
@@ -89,7 +104,8 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
     """Batched + single + incremental serving for one analysis kind."""
     analysis = get_analysis(kind)
     host_ref = analysis.host_fn
-    stats: dict = {"kind": kind, "substrates": substrates(kind)}
+    stats: dict = {"kind": kind, "substrates": substrates(kind, engine),
+                   "certificate": engine.certificate_for(kind)}
 
     # ---- batched serving -------------------------------------------------
     t_cold = None
@@ -179,6 +195,34 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
     return stats
 
 
+def certificate_report(per_kind: list) -> dict:
+    """Fold the per-kind rows into per-CERTIFICATE serving rates: for each
+    certificate actually served, which kinds rode it, their summed
+    steady-state batched + single qps, and the live rebuild counters —
+    the ``--certificate`` comparison view of the same data. Rebuilds are
+    credited to the certificate that rebuilt (every live pair is probed on
+    a deletion, not just the served one), so a certificate can carry a
+    rebuild count without serving any kind directly."""
+    def agg_for(by_cert, cert):
+        return by_cert.setdefault(
+            cert, {"kinds": [], "batched_steady_qps": 0.0, "single_qps": 0.0,
+                   "rebuilds": 0})
+
+    by_cert: dict = {}
+    for row in per_kind:
+        agg = agg_for(by_cert, row["certificate"])
+        agg["kinds"].append(row["kind"])
+        if row["batched"]["steady_qps"]:
+            agg["batched_steady_qps"] += row["batched"]["steady_qps"]
+        agg["single_qps"] += row["single"]["qps"]
+    for row in per_kind:
+        inc = row.get("incremental")
+        if inc:
+            for cert, count in inc["cert_rebuilds"].items():
+                agg_for(by_cert, cert)["rebuilds"] += count
+    return by_cert
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--analysis", action="append",
@@ -198,6 +242,10 @@ def main(argv=None):
     ap.add_argument("--delete-ratio", type=float, default=0.25,
                     help="churn workload: fraction of deltas that are "
                          "deletions")
+    ap.add_argument("--certificate", choices=list(CERTS), default="auto",
+                    help="serve every kind from this certificate where the "
+                         "kind can ride it (falls back to the kind's "
+                         "declared default elsewhere); 'auto' = defaults")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--verify", action="store_true",
@@ -216,7 +264,7 @@ def main(argv=None):
         args.edges = min(args.edges, 1024)
         args.deltas = min(args.deltas, 4)
 
-    engine = BridgeEngine()
+    engine = BridgeEngine(certificate=args.certificate)
     queries = make_queries(args.queries, args.n, args.edges, seed=args.seed)
     per_kind = [serve_kind(engine, kind, queries, args) for kind in kinds]
 
@@ -226,13 +274,22 @@ def main(argv=None):
     for row in per_kind:
         sub = row["substrates"]
         print(f"substrate: {row['kind']:11s} cert={sub['certificate']} "
+              f"served={row['certificate']} "
               f"single={sub['single']} batched={sub['batched']} "
               f"incremental={sub['incremental']} "
               f"decremental={sub['decremental']} "
               f"distributed={sub['distributed']}", flush=True)
+    by_cert = certificate_report(per_kind)
+    for cert, agg in by_cert.items():
+        print(f"cert     : {cert:11s} kinds={','.join(agg['kinds'])} "
+              f"single {agg['single_qps']:.1f} q/s | batched steady "
+              f"{agg['batched_steady_qps']:.1f} q/s | rebuilds "
+              f"{agg['rebuilds']}", flush=True)
     report = {"kinds": per_kind, "engine": info,
+              "certificates": by_cert,
               "config": {"batch": args.batch, "queries": args.queries,
-                         "n": args.n, "edges": args.edges}}
+                         "n": args.n, "edges": args.edges,
+                         "certificate": args.certificate}}
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump(report, f, indent=2)

@@ -1,4 +1,4 @@
-from repro.runtime.watchdog import StepWatchdog
 from repro.runtime.failures import FailureInjector
+from repro.runtime.watchdog import StepWatchdog
 
 __all__ = ["StepWatchdog", "FailureInjector"]

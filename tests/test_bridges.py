@@ -1,6 +1,5 @@
 """Bridge finding: host DFS + device PRAM extraction vs networkx oracle."""
 import numpy as np
-from _hyp import given, st
 
 from repro.core import find_bridges
 from repro.core.bridges_device import bridge_mask_device, bridges_device
@@ -8,6 +7,7 @@ from repro.core.bridges_host import bridges_dfs
 from repro.graph import generators as gen
 from repro.graph.datastructs import EdgeList
 
+from _hyp import given, st
 from helpers import bucketed_graph, nx_bridges, to_pair_set
 
 

@@ -1,6 +1,5 @@
 """Sparse-certificate properties (paper Lemma 1 + the certificate theorem)."""
 import numpy as np
-from _hyp import given, st
 
 from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
 from repro.core.certificate import (
@@ -13,6 +12,7 @@ from repro.core.certificate import (
 from repro.graph import generators as gen
 from repro.graph.datastructs import EdgeList
 
+from _hyp import given, st
 from helpers import SHAPE_BUCKETS, bucketed_graph, nx_bridges
 
 

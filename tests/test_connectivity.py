@@ -7,8 +7,6 @@ import networkx as nx
 import numpy as np
 import pytest
 
-from _hyp import given, st
-from helpers import bucketed_graph, to_graph, to_pair_set
 from repro.connectivity import (
     articulation_points,
     articulation_points_dfs,
@@ -24,6 +22,9 @@ from repro.connectivity.host import bridges_dfs
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
 from repro.graph.datastructs import EdgeList
+
+from _hyp import given, st
+from helpers import bucketed_graph, to_graph, to_pair_set
 
 # One (n, E) operating point so the whole module shares a few compiled
 # programs on the 1-core box: n in (32, 64] -> bucket 64, E -> bucket 512.

@@ -18,7 +18,8 @@ import numpy as np
 import pytest
 
 from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
-from repro.core.certificate import CERTIFICATE_BUILDERS, certificate_capacity
+from repro.core.certificate import certificate_capacity
+from repro.core.certs import certificate_builder
 from repro.core.merge import simulate_churn_host, simulate_merge_host
 from repro.core.partition import partition_edges
 from repro.engine import BatchedEdgeList, BridgeEngine
@@ -64,8 +65,8 @@ def _base(seed=1):
     return s, d, list(zip(s.tolist(), d.tolist()))
 
 
-def _cert_pairs(eng):
-    cs, cd, cm = (np.asarray(x) for x in eng._live["2ec"])
+def _cert_pairs(eng, name="2ec"):
+    cs, cd, cm = (np.asarray(x) for x in eng._live["certs"][name][:3])
     return list(zip(cs[cm].tolist(), cd[cm].tolist()))
 
 
@@ -91,7 +92,7 @@ def test_noncertificate_deletion_is_free():
     eng = ENGINE.load(s, d, N)
     certset = set((min(x, y), max(x, y)) for x, y in _cert_pairs(eng))
     eng.current_analysis("cuts")  # materialize the SFS pair too
-    ss, sd, sm = (np.asarray(x) for x in eng._live["sfs"])
+    ss, sd, sm = (np.asarray(x) for x in eng._live["certs"]["sfs"][:3])
     certset |= set((min(int(a), int(b)), max(int(a), int(b)))
                    for a, b in zip(ss[sm], sd[sm]))
     noncert = [p for p in pairs
@@ -270,7 +271,7 @@ def test_simulate_churn_host_matches_recompute(certificate, kind, schedule):
     m = 4
     psrc, pdst, pmask = partition_edges(s, d, N, m, seed=2)
     shards = [EdgeList(psrc[i], pdst[i], pmask[i], N) for i in range(m)]
-    certify = CERTIFICATE_BUILDERS[certificate]
+    certify = certificate_builder(certificate)
     certs = simulate_churn_host(shards, *_keys(dels), schedule=schedule,
                                 certify=certify)
     want = _host(kind, live)
@@ -380,6 +381,36 @@ def test_check_bench_fails_on_slowdown_and_missing_records():
     # ignores float-valued derived tokens (speedup_vs_full=12.3x)
     assert cb.parse_counters("delta=48 speedup_vs_full=12.3x traces=5") == {
         "delta": 48, "traces": 5}
+
+
+def test_check_bench_pins_round_counters_exactly():
+    """The fig7/path_world_rounds record's round counters are pinned like
+    program-cache counters: a depth regression (hybrid rounds creeping up)
+    fails the gate even with identical timings."""
+    cb = _check_bench()
+    derived = "V=1024 sfs_rounds=1025 hybrid_rounds=2 chain_rounds=2"
+    base = [{"name": "fig7/path_world_rounds", "us_per_call": 50.0,
+             "derived": derived}]
+    cur = [{"name": "fig7/path_world_rounds", "us_per_call": 50.0,
+            "derived": "V=1024 sfs_rounds=1025 hybrid_rounds=200 "
+                       "chain_rounds=2"}]
+    fails = cb.compare(base, cur, tolerance=50.0)
+    assert any("hybrid_rounds" in f for f in fails)
+    assert cb.compare(base, base, tolerance=50.0) == []
+    for key in ("sfs_rounds", "hybrid_rounds", "chain_rounds"):
+        assert key in cb.EXACT_KEYS
+
+
+def test_check_bench_covers_hybrid_cache_record():
+    """fig6/hybrid_cache rides the same exact-counter rule as
+    fig6/engine_cache: an extra hybrid-phase program fails the gate."""
+    cb = _check_bench()
+    base = [{"name": "fig6/hybrid_cache", "us_per_call": 0.0,
+             "derived": "programs=10 misses=10 traces=10"}]
+    cur = [{"name": "fig6/hybrid_cache", "us_per_call": 0.0,
+            "derived": "programs=11 misses=11 traces=11"}]
+    fails = cb.compare(base, cur, tolerance=50.0)
+    assert any("programs" in f for f in fails)
 
 
 def test_registry_decremental_flag():

@@ -1,13 +1,13 @@
 """Euler-tour machinery invariants against a numpy recursive-DFS oracle."""
+import jax.numpy as jnp
 import numpy as np
-from _hyp import given, st
 
 from repro.core.euler import build_sparse_table, euler_tour, range_reduce
 from repro.core.forest import spanning_forest
 from repro.graph import generators as gen
 from repro.graph.datastructs import INF32, EdgeList
 
-import jax.numpy as jnp
+from _hyp import given, st
 
 
 def _tour_inputs(n, seed):

@@ -3,7 +3,6 @@ for both the Borůvka hooking forest and the scan-first-search (BFS-layer)
 frontier-hooking primitive."""
 import networkx as nx
 import numpy as np
-from _hyp import given, st
 
 from repro.core.forest import (
     connected_components,
@@ -14,6 +13,7 @@ from repro.core.forest import (
 from repro.graph import generators as gen
 from repro.graph.datastructs import EdgeList
 
+from _hyp import given, st
 from helpers import bucketed_graph, to_graph
 
 

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, st
 
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
@@ -11,6 +10,8 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.segment_min.kernel import segment_min_pallas
 from repro.kernels.segment_min.ref import segment_min_ref
+
+from _hyp import given, st
 
 
 # ---------------------------------------------------------------- segment_min

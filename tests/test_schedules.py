@@ -10,14 +10,14 @@ per-phase certify step machine-by-machine on host — no collectives — so the
 equivalence property is testable in a single-device environment. The
 end-to-end shard_map version runs too when this jax build supports it.
 """
+import jax
 import numpy as np
 import pytest
 
-import jax
-
 from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
 from repro.core.bridges_host import bridges_from_edgelist
-from repro.core.certificate import CERTIFICATE_BUILDERS, certificate_capacity
+from repro.core.certificate import certificate_capacity
+from repro.core.certs import certificate_builder
 from repro.core.merge import simulate_merge_host
 from repro.core.partition import partition_edges
 from repro.engine import BridgeEngine, make_analysis_fn
@@ -51,7 +51,7 @@ CASES = [
 def test_three_schedules_identical_bridges(name, make):
     src, dst, n = make()
     want = nx_bridges(src, dst, n)
-    certify = CERTIFICATE_BUILDERS["2ec"]
+    certify = certificate_builder("2ec")
     results = {}
     for schedule in ("paper", "xor", "hierarchical"):
         certs = simulate_merge_host(
@@ -73,7 +73,7 @@ def test_distributed_kind_matches_single_device_all_schedules(kind):
     results identical to the single-device engine path, under all three
     merge schedules."""
     analysis = get_analysis(kind)
-    certify = CERTIFICATE_BUILDERS[analysis.certificate]
+    certify = certificate_builder(analysis.certificate)
     src, dst, n = CASES[0][1]()
     want = ENGINE.analyze(src, dst, n, kind=kind)
     final_fn = jax.jit(make_analysis_fn(n, kind, "device"))

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import Prefetcher, SyntheticTokens, recsys_batches
@@ -21,6 +20,8 @@ from repro.optim import (
 )
 from repro.runtime import FailureInjector, StepWatchdog
 from repro.runtime.failures import SimulatedFailure
+
+from _hyp import given, st
 
 
 # -------------------------------------------------------------------- adamw
