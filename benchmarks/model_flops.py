@@ -26,10 +26,17 @@ bridges (the paper's workload; int-vector ops counted as FLOP-equivalents):
   merge phases: log2(M) * 2 * log2(V) * 4(V-1) * ~8
   final PRAM bridges: ~40 * V * log2(V)
   collective bytes (exact by construction): log2(M) phases * 2(V-1) * 9 B.
+  Memory traffic per round-scanned edge slot depends on the kernel path:
+  the fused ``boruvka_round`` kernel streams the raw buffer once
+  (9 B/edge/round); the three-pass lax baseline re-reads it through two
+  ``segment_min`` passes (25 B/edge/round) — ``fused=`` selects the term
+  (byte model: repro.kernels.boruvka_round.ops, pinned by fig9).
 """
 from __future__ import annotations
 
 import math
+
+from repro.kernels.boruvka_round.ops import boruvka_round_bytes
 
 
 def lm_flops(cfg, shape: dict) -> float:
@@ -93,7 +100,8 @@ def recsys_flops(cfg, shape: dict) -> float:
 
 def bridges_model(shape: dict, m: int, merge: str = "recertify",
                   rounds_phase0: float | None = None,
-                  rounds_merge: float | None = None) -> dict:
+                  rounds_merge: float | None = None,
+                  fused: bool = True) -> dict:
     """Analytic terms for the paper's algorithm (see module docstring).
 
     ``rounds_*`` default to the worst case ceil(log2 V); pass MEASURED
@@ -102,6 +110,9 @@ def bridges_model(shape: dict, m: int, merge: str = "recertify",
     ``merge='incremental'`` models the warm-start merge: per phase the two
     delta passes scan only the received 2(n-1) buffer (rounds_merge is then
     the measured f1+f2 DELTA rounds) plus one 4(n-1) concat+compact.
+    ``fused`` selects the per-round edge-scan traffic: the fused
+    boruvka_round kernel (9 B/edge/round, the default production path) vs
+    the three-pass lax baseline (25 B/edge/round).
     """
     v, e = shape["n_nodes"], shape["n_edges"]
     worst = math.ceil(math.log2(v))
@@ -109,23 +120,25 @@ def bridges_model(shape: dict, m: int, merge: str = "recertify",
     phases = math.ceil(math.log2(m))
     ops_phase0 = 2 * r0 * (e / m) * 8
     cert_bytes = 2 * (v - 1) * 9  # src,dst int32 + mask byte
+    rb = boruvka_round_bytes(1, fused)  # bytes per edge slot per round scan
     if merge == "incremental":
         rm = rounds_merge if rounds_merge is not None else 2 * worst
-        # rm = f1+f2 delta rounds over the 2(n-1) recv buffer, + concat/
-        # compact of the 4(n-1) union once per phase
-        mem_merge = phases * (rm * 2 * v + 4 * v) * 9
+        # rm = f1+f2 delta rounds over the 2(n-1) recv buffer (each a fused
+        # or three-pass round scan), + concat/compact of the 4(n-1) union
+        # once per phase (a copy: 9 B/slot regardless of kernel path)
+        mem_merge = phases * (rm * 2 * v * rb + 4 * v * 9)
         ops_merge = phases * (rm * 2 * v + 4 * v) * 8
     else:
         rm = rounds_merge if rounds_merge is not None else 2 * worst
         # rm = f1+f2 rounds (worst case 2 passes x log2 V), each scanning
         # the full 4(n-1) union
-        mem_merge = phases * rm * 4 * v * 9
+        mem_merge = phases * rm * 4 * v * rb
         ops_merge = phases * rm * 4 * v * 8
     ops_final = 40 * v * math.ceil(math.log2(max(v, 2)))
     return {
         "model_ops": ops_phase0 + ops_merge + ops_final,
         "collective_bytes_per_device": phases * cert_bytes,
-        "memory_bytes_per_device": 2 * r0 * (e / m) * 9 + mem_merge,
+        "memory_bytes_per_device": 2 * r0 * (e / m) * rb + mem_merge,
     }
 
 

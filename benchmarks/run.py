@@ -32,7 +32,7 @@ def rows_to_records(rows: list[str]) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,fig5,fig6,fig7,fig8")
+                    help="comma list: fig2,fig3,fig4,fig5,fig6,fig7,fig8,fig9")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes (CI sanity, not for comparison)")
     ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
@@ -48,6 +48,7 @@ def main() -> None:
         fig6_engine,
         fig7_connectivity,
         fig8_distributed_kinds,
+        fig9_kernels,
     )
 
     benches = {
@@ -58,6 +59,7 @@ def main() -> None:
         "fig6": fig6_engine.run,
         "fig7": fig7_connectivity.run,
         "fig8": fig8_distributed_kinds.run,
+        "fig9": fig9_kernels.run,
     }
     if which and not which <= set(benches):
         ap.error(f"unknown figure(s) {sorted(which - set(benches))}; "

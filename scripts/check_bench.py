@@ -36,9 +36,11 @@ import re
 import sys
 
 #: derived-column counter keys pinned exactly (deterministic by design):
-#: engine program-cache counters + certificate round counters
+#: engine program-cache counters + certificate round counters + the fused
+#: kernel's byte-traffic model and measured Borůvka rounds (fig9)
 EXACT_KEYS = ("programs", "misses", "traces",
-              "sfs_rounds", "hybrid_rounds", "chain_rounds")
+              "sfs_rounds", "hybrid_rounds", "chain_rounds",
+              "boruvka_rounds", "bytes_fused", "bytes_lax")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
-# CI entry point (CPU): tier-1 tests + quickstart example + the perf-path
-# smoke benchmark suite (fig5 baseline crossover, fig6 engine, fig7
-# connectivity, fig8 distributed kinds — each asserts its own
-# no-retrace/sanity invariants) + the bench-regression gate
-# (scripts/check_bench.py vs the committed BENCH_baseline.json: cache
-# counters exact, timings within a generous tolerance), so a perf-path
-# regression fails the build. Usable locally (no installs needed beyond
-# jax/numpy/networkx) and from .github/workflows/ci.yml.
+# CI entry point (CPU): tier-1 tests + the kernel interpret-mode suite +
+# quickstart example + the perf-path smoke benchmark suite (fig5 baseline
+# crossover, fig6 engine, fig7 connectivity, fig8 distributed kinds, fig9
+# fused-kernel byte/round records — each asserts its own no-retrace/
+# sanity/parity invariants) + the bench-regression gate
+# (scripts/check_bench.py vs the committed BENCH_baseline.json: cache,
+# round and byte counters exact, timings within a generous tolerance), so
+# a perf-path regression fails the build. Usable locally (no installs
+# needed beyond jax/numpy/networkx) and from .github/workflows/ci.yml.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,14 +17,20 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== kernel interpret-mode suite (Pallas parity vs jnp oracles) =="
+python -m pytest tests/test_kernels.py -x -q
+
 echo "== examples/quickstart.py =="
 python examples/quickstart.py
 
-echo "== benchmarks smoke suite (fig5 + fig6 + fig7) =="
-python -m benchmarks.run --only fig5,fig6,fig7 --smoke --json BENCH_ci_smoke.json
+echo "== benchmarks smoke suite (fig5 + fig6 + fig7 + fig9) =="
+python -m benchmarks.run --only fig5,fig6,fig7,fig9 --smoke --json BENCH_ci_smoke.json
 
 echo "== fig8: per-kind merged-certificate qps (host schedule simulator) =="
 python -m benchmarks.run --only fig8 --smoke --json BENCH_fig8_distributed_kinds.json
+
+echo "== fig9: fused-kernel records artifact =="
+python -m benchmarks.run --only fig9 --smoke --json BENCH_fig9_kernels.json
 
 echo "== bench-regression gate vs BENCH_baseline.json =="
 python scripts/check_bench.py --baseline BENCH_baseline.json \

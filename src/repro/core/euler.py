@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.graph.datastructs import INF32, INT
+from repro.kernels.segment_min.ops import segment_min
 
 
 def _ceil_log2(n: int) -> int:
@@ -102,8 +103,10 @@ def euler_tour(tsrc, tdst, tmask, labels, n: int):
     # so disc[v] = 1 + min entering-arc position. Roots are discovered at the
     # position of their first outgoing arc (their component offset). This keeps
     # discovery times unique: root=offset, first child=offset+1, ...
-    disc = jax.ops.segment_min(
-        jnp.where(amask, gpos, INF32), jnp.where(amask, arc_dst, 0), num_segments=n
+    # kernel-backed segment_min (repro.kernels.segment_min): Pallas on TPU,
+    # the jnp scatter-min oracle elsewhere — same INF32-for-empty contract
+    disc = segment_min(
+        jnp.where(amask, gpos, INF32), jnp.where(amask, arc_dst, 0), n
     )
     disc = jnp.where(disc < INF32, disc + 1, disc)
     disc = jnp.where(is_root, offset, disc)

@@ -5,7 +5,8 @@ Borůvka-style minimum-edge hooking with pointer-doubling contraction:
 
   repeat O(log V) times:
     1. every component picks its minimum-index incident cross edge
-       (``segment_min`` over both endpoints' component labels)
+       (the fused ``boruvka_round`` reduction over both endpoints'
+       component labels — one streamed pass over the edge buffer)
     2. components hook along the picked edge; mutual 2-cycles (the only
        possible cycles under distinct edge keys) are broken by id order
     3. labels are flattened by pointer doubling
@@ -13,6 +14,14 @@ Borůvka-style minimum-edge hooking with pointer-doubling contraction:
 Each selected edge that survives hooking joins the forest. Distinct edge
 indices act as distinct weights, so the classic Borůvka argument gives an
 acyclic, component-spanning edge set.
+
+Both hooking loops dispatch their per-round edge scan through
+``repro.kernels.boruvka_round`` (DESIGN.md §Kernels): the fused Pallas
+kernel on TPU, the jnp oracle elsewhere, with ``use_pallas=True`` forcing
+the kernel (interpret mode off-TPU) for parity testing. The knob threads
+through every public entry point here, so certificates — and through the
+certificate registry, every engine substrate — inherit the fused path
+with zero engine edits.
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.graph.datastructs import INF32, INT, EdgeList
+from repro.kernels.boruvka_round.ops import boruvka_round, frontier_round
+from repro.kernels.segment_min.ops import segment_min
 
 
 def _ceil_log2(n: int) -> int:
@@ -37,17 +48,18 @@ def _shortcut(parent: jax.Array, steps: int) -> jax.Array:
     return lax.fori_loop(0, steps, body, parent)
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _forest_impl(src, dst, mask, n: int, init_labels=None):
+@partial(jax.jit, static_argnames=("n", "use_pallas"))
+def _forest_impl(src, dst, mask, n: int, init_labels=None,
+                 use_pallas: bool | None = None):
     """Borůvka hooking. ``init_labels`` warm-starts from an existing
     partition (path-compressed component labels): the returned forest then
     contains only edges that merge ACROSS the initial components — the
     incremental-merge primitive (see certificate.merge_certificates_
     incremental). Rounds are data-dependent (convergence-tested while loop,
     bounded by log2(n)+2); the round count is returned for the measured
-    roofline model."""
+    roofline model. ``use_pallas`` selects the per-round edge-scan backend
+    (None = auto: fused Pallas kernel on TPU, jnp oracle elsewhere)."""
     E = src.shape[0]
-    eidx = jnp.arange(E, dtype=INT)
     log_n = _ceil_log2(n)
     # Self-loops are never cross edges; masked slots never participate.
     valid = mask & (src != dst)
@@ -58,17 +70,16 @@ def _forest_impl(src, dst, mask, n: int, init_labels=None):
 
     def body(state):
         labels, forest, _, rounds = state
-        lu = labels[src]
-        lv = labels[dst]
-        cross = (lu != lv) & valid
-        key = jnp.where(cross, eidx, INF32)
-        best_u = jax.ops.segment_min(key, lu, num_segments=n)
-        best_v = jax.ops.segment_min(key, lv, num_segments=n)
-        best = jnp.minimum(best_u, best_v)  # [n] per-component best edge
+        # fused round: tombstone mask + both label gathers + dual-endpoint
+        # segment-min in ONE streamed pass over the edge buffer
+        best = boruvka_round(src, dst, valid, labels, n,
+                             use_pallas=use_pallas)
         has = best < INF32
         e = jnp.where(has, best, 0)
-        cu = lu[e]
-        cv = lv[e]
+        # O(n) gathers of the chosen edges' endpoint labels — the only
+        # post-reduction label reads (nothing E-sized after the fused pass)
+        cu = labels[src[e]]
+        cv = labels[dst[e]]
         comp = jnp.arange(n, dtype=INT)
         other = jnp.where(cu == comp, cv, cu)
         prop = jnp.where(has, other, comp)
@@ -92,36 +103,39 @@ def _forest_impl(src, dst, mask, n: int, init_labels=None):
     return forest, labels, rounds
 
 
-def spanning_forest(edges: EdgeList):
+def spanning_forest(edges: EdgeList, use_pallas: bool | None = None):
     """Returns (forest_mask bool[E], labels int32[n]).
 
     ``forest_mask`` selects a spanning forest of the masked subgraph;
     ``labels`` maps each vertex to its connected-component representative.
     """
     forest, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
-                                     edges.n_nodes)
+                                     edges.n_nodes, use_pallas=use_pallas)
     return forest, labels
 
 
-def spanning_forest_ex(edges: EdgeList, init_labels=None):
+def spanning_forest_ex(edges: EdgeList, init_labels=None,
+                       use_pallas: bool | None = None):
     """(forest_mask, labels, rounds_used); optional warm-start labels.
 
     With ``init_labels`` the forest spans only the *contraction* of the
     initial partition by the edge set (edges internal to an initial
     component are never selected)."""
     return _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes,
-                        init_labels=init_labels)
+                        init_labels=init_labels, use_pallas=use_pallas)
 
 
-def connected_components(edges: EdgeList):
+def connected_components(edges: EdgeList, use_pallas: bool | None = None):
     """Component labels only (same hooking machinery)."""
-    _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes)
+    _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
+                                edges.n_nodes, use_pallas=use_pallas)
     return labels
 
 
 # --------------------------------------------------------- scan-first search
-@partial(jax.jit, static_argnames=("n",))
-def _sfs_impl(src, dst, mask, n: int, comp_labels):
+@partial(jax.jit, static_argnames=("n", "use_pallas"))
+def _sfs_impl(src, dst, mask, n: int, comp_labels,
+              use_pallas: bool | None = None):
     """Level-synchronous frontier hooking: a scan-first-search (BFS-layer)
     spanning forest, rooted at each component's minimum vertex id.
 
@@ -140,21 +154,14 @@ def _sfs_impl(src, dst, mask, n: int, comp_labels):
     root int[n], rounds).
     """
     E = src.shape[0]
-    eidx = jnp.arange(E, dtype=INT)
     vs = jnp.arange(n, dtype=INT)
     valid = mask & (src != dst)
 
     # roots: each component's minimum vertex id (one scan origin per
     # component — a valid sequential scan order starts there)
-    minid = jax.ops.segment_min(vs, comp_labels, num_segments=n)
+    minid = segment_min(vs, comp_labels, n, use_pallas=use_pallas)
     root = minid[comp_labels]
     is_root = root == vs
-
-    # both orientations so every edge can hook either endpoint
-    us = jnp.concatenate([src, dst])
-    ws = jnp.concatenate([dst, src])
-    e2 = jnp.concatenate([eidx, eidx])
-    v2 = jnp.concatenate([valid, valid])
 
     def cond(state):
         _, _, _, _, _, changed, rounds = state
@@ -162,15 +169,14 @@ def _sfs_impl(src, dst, mask, n: int, comp_labels):
 
     def body(state):
         visited, level, parent, forest, frontier, _, rounds = state
-        cand = v2 & frontier[us] & ~visited[ws]
-        # parent = first-scanned frontier neighbor = minimum vertex id
-        best_p = jax.ops.segment_min(
-            jnp.where(cand, us, INF32), jnp.where(cand, ws, 0), num_segments=n)
+        # fused frontier round: candidate mask + both arc orientations +
+        # the lexicographic (parent id, edge slot) reduction in ONE
+        # streamed pass over the raw edge buffer. best_p = minimum-id
+        # frontier neighbor per newly reached vertex; best_e = minimum
+        # edge slot to that neighbor (ties on parallel edges).
+        best_p, best_e = frontier_round(src, dst, valid, frontier, visited,
+                                        n, use_pallas=use_pallas)
         newly = best_p < INF32
-        # tree edge slot: minimum slot among edges to the chosen parent
-        sel = cand & (us == best_p[ws])
-        best_e = jax.ops.segment_min(
-            jnp.where(sel, e2, INF32), jnp.where(sel, ws, 0), num_segments=n)
         parent = jnp.where(newly, best_p.astype(INT), parent)
         level = jnp.where(newly, rounds + 1, level)
         forest = forest.at[jnp.where(newly, best_e, E)].set(True, mode="drop")
@@ -185,7 +191,7 @@ def _sfs_impl(src, dst, mask, n: int, comp_labels):
     return forest, parent, level, root, rounds
 
 
-def scan_first_forest(edges: EdgeList):
+def scan_first_forest(edges: EdgeList, use_pallas: bool | None = None):
     """Returns (forest_mask bool[E], parent int[n], level int[n]).
 
     The level-synchronous frontier-hooking primitive: a BFS-layer scan-first
@@ -194,15 +200,16 @@ def scan_first_forest(edges: EdgeList):
     point at themselves). Component structure matches `spanning_forest` —
     only the tree SHAPE differs (layered, which is what makes the forest
     pair a vertex-connectivity certificate)."""
-    f, p, lvl, _, _ = scan_first_forest_ex(edges)
+    f, p, lvl, _, _ = scan_first_forest_ex(edges, use_pallas=use_pallas)
     return f, p, lvl
 
 
-def scan_first_forest_ex(edges: EdgeList):
+def scan_first_forest_ex(edges: EdgeList, use_pallas: bool | None = None):
     """(forest_mask, parent, level, root_labels, rounds_used).
 
     `root_labels[v]` is the component's canonical minimum vertex id — the
     same partition as `connected_components`, canonicalized."""
     _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
-                                edges.n_nodes)
-    return _sfs_impl(edges.src, edges.dst, edges.mask, edges.n_nodes, labels)
+                                edges.n_nodes, use_pallas=use_pallas)
+    return _sfs_impl(edges.src, edges.dst, edges.mask, edges.n_nodes, labels,
+                     use_pallas=use_pallas)

@@ -1,0 +1,7 @@
+from repro.kernels.boruvka_round.ops import (
+    boruvka_round,
+    frontier_round,
+    kernel_path,
+)
+
+__all__ = ["boruvka_round", "frontier_round", "kernel_path"]

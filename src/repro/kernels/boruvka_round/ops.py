@@ -1,0 +1,95 @@
+"""Public fused-round ops: Pallas kernel on TPU, interpret-mode kernel or
+the jnp oracle elsewhere — the same dispatch idiom as kernels/segment_min,
+so `core/forest.py` (and through it every certificate, hence every engine
+substrate) inherits the fused path with zero engine edits.
+
+``use_pallas`` tri-state on every op:
+  * ``None``  — auto: compiled kernel on TPU, jnp oracle elsewhere (the
+    oracle beats interpret mode on CPU by orders of magnitude);
+  * ``True``  — force the kernel (interpret mode off-TPU; how the parity
+    tests drive the Pallas code path in CPU CI);
+  * ``False`` — force the jnp oracle.
+
+``kernel_path(use_pallas)`` names the backend a given setting resolves to
+(``pallas`` | ``interpret`` | ``oracle``) — the string serving reports and
+benchmark JSONs record so perf numbers are attributable to a code path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.boruvka_round.kernel import (
+    boruvka_round_pallas,
+    frontier_round_pallas,
+)
+from repro.kernels.boruvka_round.ref import (
+    boruvka_round_ref,
+    frontier_round_ref,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernel_path(use_pallas: bool | None = None) -> str:
+    """Backend this ``use_pallas`` setting resolves to, as a record string."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return "pallas" if _on_tpu() else "interpret"
+    return "oracle"
+
+
+def boruvka_round(src, dst, mask, labels, num_segments: int,
+                  use_pallas: bool | None = None):
+    """Fused Borůvka hooking round (contract: ``ref.boruvka_round_ref``)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return boruvka_round_pallas(src, dst, mask, labels, num_segments,
+                                    interpret=not _on_tpu())
+    return boruvka_round_ref(src, dst, mask, labels, num_segments)
+
+
+def frontier_round(src, dst, mask, frontier, visited, num_segments: int,
+                   use_pallas: bool | None = None):
+    """Fused SFS frontier round (contract: ``ref.frontier_round_ref``)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return frontier_round_pallas(src, dst, mask, frontier, visited,
+                                     num_segments, interpret=not _on_tpu())
+    return frontier_round_ref(src, dst, mask, frontier, visited, num_segments)
+
+
+# ------------------------------------------------- HBM byte-traffic model
+# The analytic edge-buffer traffic per round, the quantity the fused kernel
+# halves (DESIGN.md §Kernels has the derivation; benchmarks/fig9_kernels.py
+# pins these as exact counters). Only reads of E-sized buffers count —
+# label/frontier tiles are VMEM-resident in both paths and O(n) ≪ O(E).
+
+#: bytes per edge slot of the raw buffer: src int32 + dst int32 + mask byte
+EDGE_SLOT_BYTES = 9
+
+
+def boruvka_round_bytes(e: int, fused: bool) -> int:
+    """Edge-buffer bytes one Borůvka round streams from HBM.
+
+    fused: one pass over (src, dst, mask) — 9 bytes/edge. lax: three trips —
+    the key/cross build reads the raw buffer (9), then each of the two
+    ``segment_min`` passes re-reads its (key, label-ids) pair (8 + 8).
+    """
+    return e * EDGE_SLOT_BYTES if fused else e * (9 + 8 + 8)
+
+
+def frontier_round_bytes(e: int, fused: bool) -> int:
+    """Edge-buffer bytes one SFS frontier round streams from HBM.
+
+    fused: one pass over the RAW E-slot buffer (both arc orientations are
+    derived in VMEM) — 9 bytes/edge. lax: the candidate-mask build reads the
+    materialized 2E arc arrays (us, ws, v2: 9 bytes/arc), then the parent
+    and edge-slot ``segment_min`` passes each re-read a (key, ids) pair
+    over 2E arcs (8 + 8) — 50 bytes/edge in total.
+    """
+    return e * EDGE_SLOT_BYTES if fused else 2 * e * (9 + 8 + 8)

@@ -25,11 +25,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.graph.datastructs import INF32
+from repro.graph.datastructs import INF32, INT
 
 # VPU-aligned tiles: edges per block x segments per block
 EDGE_BLOCK = 1024
 SEG_BLOCK = 512
+
+
+def check_key_space(e: int, num_segments: int, *, edge_block: int = EDGE_BLOCK,
+                    seg_block: int = SEG_BLOCK) -> None:
+    """Reject shapes whose int32 keys/ids could collide with the INF32
+    sentinel or wrap int32.
+
+    The kernels generate ids as ``tile_base + iota`` (and the fused round
+    kernels generate edge keys as ``chunk_base + iota``), so the PADDED
+    index space must stay strictly below INF32: at ``num_segments`` (or
+    edge counts) approaching 2^31 buckets the packed key would alias the
+    empty-segment sentinel or overflow. Shared by kernels/segment_min and
+    kernels/boruvka_round (tests/test_kernels.py pins both failure modes).
+    """
+    if e > INF32 - edge_block:
+        raise ValueError(
+            f"edge buffer of {e} slots overflows the int32 edge-key space "
+            f"(limit {INF32 - edge_block}); shard the buffer first")
+    if num_segments > INF32 - seg_block:
+        raise ValueError(
+            f"{num_segments} segments overflows the int32 segment-id space "
+            f"(limit {INF32 - seg_block})")
 
 
 def _segment_min_kernel(keys_ref, ids_ref, out_ref):
@@ -39,13 +61,13 @@ def _segment_min_kernel(keys_ref, ids_ref, out_ref):
     ids = ids_ref[...]  # [EDGE_BLOCK]
     seg_base = j * SEG_BLOCK
     # [EDGE_BLOCK, SEG_BLOCK] masked compare on the VPU
-    seg_ids = seg_base + jax.lax.broadcasted_iota(jnp.int32, (1, SEG_BLOCK), 1)
+    seg_ids = seg_base + jax.lax.broadcasted_iota(INT, (1, SEG_BLOCK), 1)
     masked = jnp.where(ids[:, None] == seg_ids, keys[:, None], INF32)
     partial = jnp.min(masked, axis=0)  # [SEG_BLOCK]
 
     @pl.when(i == 0)
     def _init():
-        out_ref[...] = jnp.full((SEG_BLOCK,), INF32, jnp.int32)
+        out_ref[...] = jnp.full((SEG_BLOCK,), INF32, INT)
 
     out_ref[...] = jnp.minimum(out_ref[...], partial)
 
@@ -57,9 +79,14 @@ def segment_min_pallas(
     """keys, ids: int32[E] -> int32[num_segments] (INF32 for empty segments).
 
     Invalid/masked edges should carry keys == INF32 (they then never win) or
-    ids pointing at a dump segment.
+    ids pointing at a dump segment. Inputs are cast to ``datastructs.INT``
+    (int32, the repo-wide index dtype); shapes that could alias the INF32
+    sentinel are rejected by ``check_key_space``.
     """
     e = keys.shape[0]
+    check_key_space(e, num_segments)
+    keys = keys.astype(INT)
+    ids = ids.astype(INT)
     e_pad = pl.cdiv(e, EDGE_BLOCK) * EDGE_BLOCK
     n_pad = pl.cdiv(num_segments, SEG_BLOCK) * SEG_BLOCK
     if e_pad != e:
@@ -76,7 +103,7 @@ def segment_min_pallas(
             pl.BlockSpec((EDGE_BLOCK,), lambda j, i: (i,)),
         ],
         out_specs=pl.BlockSpec((SEG_BLOCK,), lambda j, i: (j,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), INT),
         interpret=interpret,
     )(keys, ids)
     return out[:num_segments]

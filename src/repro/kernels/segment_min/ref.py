@@ -1,10 +1,12 @@
 """Pure-jnp oracle for segment_min."""
 import jax
-import jax.numpy as jnp
 
-from repro.graph.datastructs import INF32
+from repro.graph.datastructs import INT
 
 
 def segment_min_ref(keys: jax.Array, ids: jax.Array, num_segments: int) -> jax.Array:
-    """min of int32 ``keys`` grouped by ``ids``; empty segments get INF32."""
-    return jax.ops.segment_min(keys, ids, num_segments=num_segments).astype(jnp.int32)
+    """min of int32 ``keys`` grouped by ``ids``; empty segments get INF32
+    (the int32 reduction identity iinfo(int32).max IS the sentinel)."""
+    return jax.ops.segment_min(
+        keys.astype(INT), ids.astype(INT), num_segments=num_segments
+    ).astype(INT)

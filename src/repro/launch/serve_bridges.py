@@ -11,7 +11,10 @@ served on every substrate now (DESIGN.md §Analysis registry); the report
 carries each kind's substrate row — which certificate it merges over and
 whether single/batched/incremental/distributed serving applies — so
 dashboards can track the substrate matrix. ``--json`` writes the per-kind
-rates plus the engine's cache hit/miss/trace counters.
+rates plus the engine's cache hit/miss/trace counters; each kind's row
+also carries ``kernel_path`` — the backend (``pallas`` | ``interpret`` |
+``oracle``) the certificate's fused per-round edge scan resolved to for
+the served requests (DESIGN.md §Kernels).
 
 ``--workload churn`` makes the incremental phase interleave link FAILURES
 (``delete_edges``, at ``--delete-ratio``) with the inserts — the paper's
@@ -43,6 +46,7 @@ from repro.connectivity.registry import analysis_kinds, get_analysis
 from repro.core.certs import certificate_names
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
+from repro.kernels.boruvka_round import kernel_path
 
 #: CLI spellings: canonical kinds, with '-' aliases for the shell
 KINDS = tuple(k.replace("_", "-") for k in analysis_kinds())
@@ -104,8 +108,12 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
     """Batched + single + incremental serving for one analysis kind."""
     analysis = get_analysis(kind)
     host_ref = analysis.host_fn
+    # which backend the certificate's per-round edge scan resolves to for
+    # every request served below (pallas | interpret | oracle) — perf
+    # numbers in the JSON report are attributable to a kernel code path
     stats: dict = {"kind": kind, "substrates": substrates(kind, engine),
-                   "certificate": engine.certificate_for(kind)}
+                   "certificate": engine.certificate_for(kind),
+                   "kernel_path": kernel_path()}
 
     # ---- batched serving -------------------------------------------------
     t_cold = None
@@ -270,7 +278,8 @@ def main(argv=None):
 
     info = engine.cache_info()
     print(f"engine   : {info['programs']} programs, {info['hits']} hits, "
-          f"{info['misses']} misses, {info['traces']} traces", flush=True)
+          f"{info['misses']} misses, {info['traces']} traces | "
+          f"kernel_path={kernel_path()}", flush=True)
     for row in per_kind:
         sub = row["substrates"]
         print(f"substrate: {row['kind']:11s} cert={sub['certificate']} "

@@ -4,11 +4,24 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.forest import scan_first_forest_ex, spanning_forest_ex
+from repro.graph import generators as gen
+from repro.graph.datastructs import INF32, EdgeList
+from repro.kernels.boruvka_round.kernel import (
+    boruvka_round_pallas,
+    frontier_round_pallas,
+)
+from repro.kernels.boruvka_round.ops import (
+    boruvka_round_bytes,
+    frontier_round_bytes,
+    kernel_path,
+)
+from repro.kernels.boruvka_round.ref import boruvka_round_ref, frontier_round_ref
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.segment_min.kernel import segment_min_pallas
+from repro.kernels.segment_min.kernel import check_key_space, segment_min_pallas
 from repro.kernels.segment_min.ref import segment_min_ref
 
 from _hyp import given, st
@@ -117,14 +130,175 @@ def test_embedding_bag_all_masked_bag():
         assert out[1].sum() == 0.0  # empty bag pools to zero
 
 
+# ----------------------------------------------- fused connectivity rounds
+def _edge_buffer(e, n, seed, self_loop_frac=0.1, mask_frac=0.2):
+    """Random masked multigraph buffer: duplicates, self-loops, tombstones."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    loops = rng.random(e) < self_loop_frac
+    dst = np.where(loops, src, dst)
+    # force duplicate (multi-)edges: copy a block of slots over another
+    if e >= 8:
+        src[e // 2 : e // 2 + e // 4] = src[: e // 4]
+        dst[e // 2 : e // 2 + e // 4] = dst[: e // 4]
+    mask = rng.random(e) >= mask_frac
+    return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize(
+    "e,n", [(7, 5), (100, 30), (1024, 512), (1500, 513), (2048, 1024), (33, 1)]
+)
+def test_boruvka_round_shapes(e, n):
+    rng = np.random.default_rng(e * 17 + n)
+    src, dst, mask = _edge_buffer(e, n, seed=e + n)
+    labels = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    got = boruvka_round_pallas(src, dst, mask, labels, n, interpret=True)
+    want = boruvka_round_ref(src, dst, mask, labels, n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize(
+    "e,n", [(7, 5), (100, 30), (1024, 512), (1500, 513), (2048, 1024)]
+)
+def test_frontier_round_shapes(e, n):
+    rng = np.random.default_rng(e * 13 + n)
+    src, dst, mask = _edge_buffer(e, n, seed=e * 3 + n)
+    frontier = jnp.asarray(rng.random(n) < 0.4)
+    visited = jnp.asarray(rng.random(n) < 0.5) | frontier
+    got_p, got_e = frontier_round_pallas(src, dst, mask, frontier, visited, n,
+                                         interpret=True)
+    want_p, want_e = frontier_round_ref(src, dst, mask, frontier, visited, n)
+    assert np.array_equal(np.asarray(got_p), np.asarray(want_p))
+    assert np.array_equal(np.asarray(got_e), np.asarray(want_e))
+
+
+def test_boruvka_round_all_masked_or_loops():
+    """Tombstoned + self-loop-only buffers reduce to all-INF32."""
+    src = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    dst = jnp.asarray([1, 1, 3, 0], jnp.int32)  # slot 1 is a self-loop
+    mask = jnp.asarray([False, True, False, False])
+    labels = jnp.arange(5, dtype=jnp.int32)
+    out = np.asarray(
+        boruvka_round_pallas(src, dst, mask, labels, 5, interpret=True))
+    assert (out == INF32).all()
+
+
+@given(st.integers(0, 1000))
+def test_boruvka_round_property(seed):
+    rng = np.random.default_rng(seed)
+    e, n = 512, 128  # fixed shapes: avoid per-example recompiles
+    src, dst, mask = _edge_buffer(e, n, seed=seed)
+    labels = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    got = boruvka_round_pallas(src, dst, mask, labels, n, interpret=True)
+    want = boruvka_round_ref(src, dst, mask, labels, n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(0, 1000))
+def test_frontier_round_property(seed):
+    rng = np.random.default_rng(seed ^ 0x5F5F)
+    e, n = 512, 128
+    src, dst, mask = _edge_buffer(e, n, seed=seed + 7)
+    frontier = jnp.asarray(rng.random(n) < 0.3)
+    visited = jnp.asarray(rng.random(n) < 0.5) | frontier
+    got_p, got_e = frontier_round_pallas(src, dst, mask, frontier, visited, n,
+                                         interpret=True)
+    want_p, want_e = frontier_round_ref(src, dst, mask, frontier, visited, n)
+    assert np.array_equal(np.asarray(got_p), np.asarray(want_p))
+    assert np.array_equal(np.asarray(got_e), np.asarray(want_e))
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2])
+def test_boruvka_round_parity_on_failure_scenarios(idx):
+    """Round-level interpret-mode parity on every planted failure world."""
+    sc = gen.failure_scenarios()[idx]
+    el = EdgeList.from_arrays(sc["src"], sc["dst"], sc["n"])
+    n = el.n_nodes
+    rng = np.random.default_rng(idx)
+    for labels in (jnp.arange(n, dtype=jnp.int32),
+                   jnp.asarray(rng.integers(0, n, n), jnp.int32)):
+        got = boruvka_round_pallas(el.src, el.dst, el.mask, labels, n,
+                                   interpret=True)
+        want = boruvka_round_ref(el.src, el.dst, el.mask, labels, n)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------- forest equivalence (end-to-end)
+@pytest.mark.parametrize("idx", [0, 1, 2])
+def test_forest_pallas_equals_lax_on_failure_scenarios(idx):
+    """`use_pallas=True` must produce the IDENTICAL forest, labels and round
+    count as the jnp-oracle path on every planted failure scenario — the
+    fused kernel is a drop-in for the three-pass lax sequence, bit for bit."""
+    sc = gen.failure_scenarios()[idx]
+    el = EdgeList.from_arrays(sc["src"], sc["dst"], sc["n"])
+    f_lax, l_lax, r_lax = spanning_forest_ex(el, use_pallas=False)
+    f_pal, l_pal, r_pal = spanning_forest_ex(el, use_pallas=True)
+    assert np.array_equal(np.asarray(f_lax), np.asarray(f_pal))
+    assert np.array_equal(np.asarray(l_lax), np.asarray(l_pal))
+    assert int(r_lax) == int(r_pal)
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2])
+def test_sfs_pallas_equals_lax_on_failure_scenarios(idx):
+    sc = gen.failure_scenarios()[idx]
+    el = EdgeList.from_arrays(sc["src"], sc["dst"], sc["n"])
+    lax_out = scan_first_forest_ex(el, use_pallas=False)
+    pal_out = scan_first_forest_ex(el, use_pallas=True)
+    for a, b in zip(lax_out, pal_out):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------- int32 key-space guard
+def test_key_space_guard_rejects_overflow():
+    ok_keys = jnp.asarray([1, 2], jnp.int32)
+    ok_ids = jnp.asarray([0, 0], jnp.int32)
+    with pytest.raises(ValueError, match="segment-id space"):
+        segment_min_pallas(ok_keys, ok_ids, num_segments=(1 << 31) - 10)
+    with pytest.raises(ValueError, match="segment-id space"):
+        boruvka_round_pallas(ok_keys, ok_ids, jnp.asarray([True, True]),
+                             jnp.asarray([0], jnp.int32),
+                             num_segments=(1 << 31) - 10)
+    # edge-key branch checked on the raw guard: no 2^31-slot array needed
+    with pytest.raises(ValueError, match="edge-key space"):
+        check_key_space((1 << 31) - 10, 4)
+    check_key_space(1 << 20, 1 << 20)  # comfortably inside: no raise
+
+
+# ---------------------------------------------------- byte-traffic invariants
+def test_fused_round_halves_edge_bytes():
+    """The acceptance bound: the fused path moves <= half the edge-buffer
+    bytes per round of the three-pass lax baseline (fig9 pins the values)."""
+    for e in (1, 1000, 1 << 20):
+        assert 2 * boruvka_round_bytes(e, fused=True) <= boruvka_round_bytes(
+            e, fused=False)
+        assert 2 * frontier_round_bytes(e, fused=True) <= frontier_round_bytes(
+            e, fused=False)
+
+
+def test_kernel_path_names():
+    assert kernel_path(False) == "oracle"
+    assert kernel_path(True) in ("pallas", "interpret")
+    assert kernel_path(None) in ("pallas", "oracle")
+
+
 # ------------------------------------------------- kernel-backed ops dispatch
 def test_ops_wrappers_run_on_cpu():
+    from repro.kernels.boruvka_round import boruvka_round, frontier_round
     from repro.kernels.embedding_bag import embedding_bag
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.segment_min import segment_min
 
     out = segment_min(jnp.asarray([3, 1], jnp.int32), jnp.asarray([0, 0], jnp.int32), 2)
     assert int(out[0]) == 1
+    src = jnp.asarray([0, 1], jnp.int32)
+    dst = jnp.asarray([1, 2], jnp.int32)
+    msk = jnp.asarray([True, True])
+    best = boruvka_round(src, dst, msk, jnp.arange(3, dtype=jnp.int32), 3)
+    assert np.asarray(best).tolist() == [0, 0, 1]
+    p, e = frontier_round(src, dst, msk, jnp.asarray([True, False, False]),
+                          jnp.asarray([True, False, False]), 3)
+    assert int(p[1]) == 0 and int(e[1]) == 0
     q = jnp.ones((1, 8, 2, 16), jnp.float32)
     assert flash_attention(q, q[:, :, :2], q[:, :, :2]).shape == (1, 8, 2, 16)
     t = jnp.ones((5, 4), jnp.float32)
