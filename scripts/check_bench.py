@@ -37,10 +37,14 @@ import sys
 
 #: derived-column counter keys pinned exactly (deterministic by design):
 #: engine program-cache counters + certificate round counters + the fused
-#: kernel's byte-traffic model and measured Borůvka rounds (fig9)
+#: kernel's byte-traffic model and measured Borůvka rounds (fig9) + the
+#: span/stage counts of the --trace records (fixed operating sequence +
+#: fixed timeit reps + seed-fixed round counts => a span-count drift means
+#: the instrumentation or the dispatch structure changed)
 EXACT_KEYS = ("programs", "misses", "traces",
               "sfs_rounds", "hybrid_rounds", "chain_rounds",
-              "boruvka_rounds", "bytes_fused", "bytes_lax")
+              "boruvka_rounds", "bytes_fused", "bytes_lax",
+              "spans", "stages")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

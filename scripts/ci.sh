@@ -20,6 +20,9 @@ python -m pytest -x -q
 echo "== kernel interpret-mode suite (Pallas parity vs jnp oracles) =="
 python -m pytest tests/test_kernels.py -x -q
 
+echo "== observability suite (spans, histograms, no-retrace under tracing) =="
+python -m pytest tests/test_obs.py -x -q
+
 echo "== examples/quickstart.py =="
 python examples/quickstart.py
 
@@ -32,10 +35,16 @@ python -m benchmarks.run --only fig8 --smoke --json BENCH_fig8_distributed_kinds
 echo "== fig9: fused-kernel records artifact =="
 python -m benchmarks.run --only fig9 --smoke --json BENCH_fig9_kernels.json
 
+echo "== fig6 under the span tracer: stage rollup + span-count gate =="
+python -m benchmarks.run --only fig6 --smoke --trace \
+    --json BENCH_ci_trace.json --trace-json BENCH_ci_trace_rollup.json
+
 echo "== bench-regression gate vs BENCH_baseline.json =="
 python scripts/check_bench.py --baseline BENCH_baseline.json \
     --current BENCH_ci_smoke.json
 python scripts/check_bench.py --baseline BENCH_baseline_fig8.json \
     --current BENCH_fig8_distributed_kinds.json
+python scripts/check_bench.py --baseline BENCH_baseline_trace.json \
+    --current BENCH_ci_trace.json
 
 echo "CI OK"

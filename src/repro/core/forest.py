@@ -33,8 +33,48 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.graph.datastructs import INF32, INT, EdgeList
-from repro.kernels.boruvka_round.ops import boruvka_round, frontier_round
+from repro.kernels.boruvka_round.ops import (
+    boruvka_round,
+    boruvka_round_bytes,
+    frontier_round,
+    frontier_round_bytes,
+    kernel_path,
+)
 from repro.kernels.segment_min.ops import segment_min
+from repro.obs import get_tracer
+
+
+def _host_kernel_span(which: str, edges: EdgeList, use_pallas, impl):
+    """Run a jitted hooking impl under a measured ``kernel/forest/<which>``
+    span, then attach synthetic ``kernel/round/<which>`` children — one per
+    data-dependent round. Rounds run inside one XLA ``while_loop`` and are
+    invisible to host timers, so the children subdivide the measured parent
+    evenly and carry the analytic HBM byte model per round
+    (``kernels.boruvka_round.ops``) as ``model_bytes`` — wall-clock truth
+    at the parent, roofline attribution at the children (DESIGN.md
+    §Observability). No-op when tracing is disabled, and skipped when the
+    caller is itself inside a trace (certificates under jit), where host
+    timing is meaningless."""
+    tr = get_tracer()
+    if not tr.enabled or isinstance(edges.src, jax.core.Tracer):
+        return impl()
+    e = int(edges.src.shape[0])
+    path = kernel_path(use_pallas)
+    fused = path != "oracle"
+    bytes_fn = (boruvka_round_bytes if which == "boruvka"
+                else frontier_round_bytes)
+    with tr.span(f"kernel/forest/{which}", edges=e, path=path) as sp:
+        out = impl()
+        rounds = int(out[-1])  # host readback of the round-count scalar
+        sp.attrs["rounds"] = rounds
+        sp.sync(out)
+    if rounds > 0:
+        per = sp.dur / rounds
+        for i in range(rounds):
+            tr.add(f"kernel/round/{which}", sp.t0 + i * per, per,
+                   parent=sp.index, round=i,
+                   model_bytes=bytes_fn(e, fused))
+    return out
 
 
 def _ceil_log2(n: int) -> int:
@@ -72,8 +112,9 @@ def _forest_impl(src, dst, mask, n: int, init_labels=None,
         labels, forest, _, rounds = state
         # fused round: tombstone mask + both label gathers + dual-endpoint
         # segment-min in ONE streamed pass over the edge buffer
-        best = boruvka_round(src, dst, valid, labels, n,
-                             use_pallas=use_pallas)
+        with jax.named_scope("kernel/round/boruvka"):
+            best = boruvka_round(src, dst, valid, labels, n,
+                                 use_pallas=use_pallas)
         has = best < INF32
         e = jnp.where(has, best, 0)
         # O(n) gathers of the chosen edges' endpoint labels — the only
@@ -109,8 +150,7 @@ def spanning_forest(edges: EdgeList, use_pallas: bool | None = None):
     ``forest_mask`` selects a spanning forest of the masked subgraph;
     ``labels`` maps each vertex to its connected-component representative.
     """
-    forest, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
-                                     edges.n_nodes, use_pallas=use_pallas)
+    forest, labels, _ = spanning_forest_ex(edges, use_pallas=use_pallas)
     return forest, labels
 
 
@@ -121,14 +161,15 @@ def spanning_forest_ex(edges: EdgeList, init_labels=None,
     With ``init_labels`` the forest spans only the *contraction* of the
     initial partition by the edge set (edges internal to an initial
     component are never selected)."""
-    return _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes,
-                        init_labels=init_labels, use_pallas=use_pallas)
+    return _host_kernel_span(
+        "boruvka", edges, use_pallas,
+        lambda: _forest_impl(edges.src, edges.dst, edges.mask, edges.n_nodes,
+                             init_labels=init_labels, use_pallas=use_pallas))
 
 
 def connected_components(edges: EdgeList, use_pallas: bool | None = None):
     """Component labels only (same hooking machinery)."""
-    _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
-                                edges.n_nodes, use_pallas=use_pallas)
+    _, labels, _ = spanning_forest_ex(edges, use_pallas=use_pallas)
     return labels
 
 
@@ -174,8 +215,10 @@ def _sfs_impl(src, dst, mask, n: int, comp_labels,
         # streamed pass over the raw edge buffer. best_p = minimum-id
         # frontier neighbor per newly reached vertex; best_e = minimum
         # edge slot to that neighbor (ties on parallel edges).
-        best_p, best_e = frontier_round(src, dst, valid, frontier, visited,
-                                        n, use_pallas=use_pallas)
+        with jax.named_scope("kernel/round/sfs"):
+            best_p, best_e = frontier_round(src, dst, valid, frontier,
+                                            visited, n,
+                                            use_pallas=use_pallas)
         newly = best_p < INF32
         parent = jnp.where(newly, best_p.astype(INT), parent)
         level = jnp.where(newly, rounds + 1, level)
@@ -209,7 +252,8 @@ def scan_first_forest_ex(edges: EdgeList, use_pallas: bool | None = None):
 
     `root_labels[v]` is the component's canonical minimum vertex id — the
     same partition as `connected_components`, canonicalized."""
-    _, labels, _ = _forest_impl(edges.src, edges.dst, edges.mask,
-                                edges.n_nodes, use_pallas=use_pallas)
-    return _sfs_impl(edges.src, edges.dst, edges.mask, edges.n_nodes, labels,
-                     use_pallas=use_pallas)
+    _, labels, _ = spanning_forest_ex(edges, use_pallas=use_pallas)
+    return _host_kernel_span(
+        "sfs", edges, use_pallas,
+        lambda: _sfs_impl(edges.src, edges.dst, edges.mask, edges.n_nodes,
+                          labels, use_pallas=use_pallas))

@@ -45,6 +45,7 @@ from repro.graph.datastructs import (
     concat_edges,
     tombstone_mask,
 )
+from repro.obs import get_tracer
 
 
 def _axis_size(mesh, axes):
@@ -83,10 +84,14 @@ def _merge_phases_one_axis(state: tuple, fold, n_nodes: int, axes, m: int,
     fold is a union no-op."""
     phases = max(int(math.ceil(math.log2(m))), 0)
     for q in range(phases):
-        perm = _phase_perm(schedule, m, q)
-        recv = _ppermute_edges(EdgeList(state[0], state[1], state[2],
-                                        n_nodes), axes, perm)
-        state = fold(state, recv)
+        # named_scope only: this body runs inside shard_map/jit, so the
+        # phase shows up in profiler captures; host wall-clock per phase
+        # comes from simulate_merge_host's spans.
+        with jax.named_scope(f"merge/phase{q}"):
+            perm = _phase_perm(schedule, m, q)
+            recv = _ppermute_edges(EdgeList(state[0], state[1], state[2],
+                                            n_nodes), axes, perm)
+            state = fold(state, recv)
     return state
 
 
@@ -276,10 +281,21 @@ def simulate_merge_host(certs, schedule: str, certify=None, grid=None):
     def run_phases(cs, sched):
         m = len(cs)
         phases = max(int(math.ceil(math.log2(m))), 0)
+        tr = get_tracer()
         for q in range(phases):
             perm = _phase_perm(sched, m, q)
             recv = {d: cs[s] for (s, d) in perm}
-            cs = [step(cs[i], recv.get(i, empty)) for i in range(m)]
+            # per-level span with per-machine children: the host-side view
+            # of the paper's merge-phase cost term (the SPMD program's
+            # phases are timed via the named_scope labels instead)
+            with tr.span(f"merge/level{q}", schedule=sched, machines=m,
+                         receivers=len(perm)):
+                out = []
+                for i in range(m):
+                    with tr.span("merge/machine", machine=i, level=q,
+                                 receiving=i in recv) as sp:
+                        out.append(sp.sync(step(cs[i], recv.get(i, empty))))
+                cs = out
         return cs
 
     if schedule in ("paper", "xor"):
@@ -313,14 +329,17 @@ def simulate_churn_host(shards, ksrc, kdst, schedule: str = "paper",
     convention as in ``simulate_merge_host``.
     """
     certify = sparse_certificate if certify is None else certify
+    tr = get_tracer()
     ks = jnp.asarray(ksrc, INT)
     kd = jnp.asarray(kdst, INT)
     km = jnp.ones(ks.shape, bool)
     certs = []
-    for sh in shards:
-        m2, _ = tombstone_mask(sh.src, sh.dst, sh.mask, ks, kd, km)
-        certs.append(certify(EdgeList(sh.src, sh.dst, m2, sh.n_nodes),
-                             capacity=certificate_capacity(sh.n_nodes)))
+    for i, sh in enumerate(shards):
+        with tr.span("merge/recertify", machine=i) as sp:
+            m2, _ = tombstone_mask(sh.src, sh.dst, sh.mask, ks, kd, km)
+            certs.append(sp.sync(
+                certify(EdgeList(sh.src, sh.dst, m2, sh.n_nodes),
+                        capacity=certificate_capacity(sh.n_nodes))))
     return simulate_merge_host(certs, schedule, certify=certify, grid=grid)
 
 

@@ -165,19 +165,26 @@ def make_analysis_fn(n_nodes: int, kind: str = "bridges",
     certify = certificate_fn(certificate if certificate is not None
                              else analysis.certificate)
 
+    cert_label = certificate if certificate is not None else analysis.certificate
+
     def one(src, dst, mask, *keys):
+        # named_scope labels match the host span taxonomy 1:1 (DESIGN.md
+        # §Observability) — jaxpr metadata only, never part of a cache key
         if on_trace is not None:
             on_trace()
         if with_delete:
-            mask, _ = tombstone_mask(src, dst, mask, *keys)
+            with jax.named_scope("stage/tombstone"):
+                mask, _ = tombstone_mask(src, dst, mask, *keys)
         buf = EdgeList(src, dst, mask, n_nodes)
         if final == "host" or analysis.device_input == "certificate":
-            buf = certify(buf, capacity=cert_cap)
+            with jax.named_scope(f"stage/certificate_build/{cert_label}"):
+                buf = certify(buf, capacity=cert_cap)
         if final == "host":
             return buf.src, buf.dst, buf.mask
-        st = tour_state(buf.src, buf.dst, buf.mask, n_nodes)
-        return analysis.device_fn(buf.src, buf.dst, buf.mask, n_nodes,
-                                  st, out_cap)
+        with jax.named_scope(f"stage/final/{analysis.kind}"):
+            st = tour_state(buf.src, buf.dst, buf.mask, n_nodes)
+            return analysis.device_fn(buf.src, buf.dst, buf.mask, n_nodes,
+                                      st, out_cap)
 
     return one
 

@@ -16,42 +16,37 @@ that into the three properties a query-serving deployment needs:
   vmapped device dispatch.
 
 * **multi-kind** — ``analyze(..., kind=...)`` serves every kind in the
-  analysis registry (bridges, articulation points, 2ECC labels, bridge
-  tree, biconnected blocks) through the same program cache. The engine
-  contains ZERO kind-specific code: each ``repro.connectivity.registry``
-  descriptor declares its certificate type, device final stage, host
-  reference, and result conversion, and the engine dispatches through it
-  on every substrate — single-device, batched, distributed, incremental
-  (DESIGN.md §Analysis registry).
+  analysis registry through the same program cache with ZERO kind-specific
+  engine code (DESIGN.md §Analysis registry).
 
-* **multi-certificate** — the certificate stage dispatches the same way:
-  the engine holds a generic ``dict[certificate name, state]`` of live
-  pairs and drives materialize / insert fold-in / delete-rebuild entirely
-  through the certificate registry (``core.certs``). Lazily-declared
-  certificates (sfs, hybrid) are only computed on the first query that
-  resolves to them; ``certificate=`` overrides the kind's default with
-  any registered type that preserves what the kind needs (DESIGN.md
-  §Certificate registry). The engine contains ZERO certificate-specific
-  code — registering a new ``Certificate`` makes it servable on every
-  substrate with no engine edits.
+* **multi-certificate** — the certificate stage dispatches through the
+  certificate registry (``core.certs``) the same way: the engine holds a
+  generic ``dict[certificate name, state]`` of live pairs and drives
+  materialize / insert fold-in / delete-rebuild entirely through the
+  registered descriptors (DESIGN.md §Certificate registry).
 
-* **incremental** — ``load`` computes the eager certificates (the
-  warm-start Borůvka 2-edge pair) now and leaves the lazy ones
-  unmaterialized, so 2-edge-only serving keeps the PR 1 update cost.
-  ``insert_edges`` folds an edge delta into every LIVE certificate state
-  via its registered fold-in and re-runs only the final analysis stage,
-  never the full pipeline.
+* **incremental / decremental** — ``load`` + ``insert_edges`` +
+  ``delete_edges`` serve edge churn from device-resident live state via
+  the warm-start fold-in and the certificate-hit rebuild rule (DESIGN.md
+  §Decremental) without ever re-running the full pipeline.
 
-* **decremental** — ``delete_edges`` serves edge deletions (link failures —
-  the paper's workload) from the same live state. Deletions are a
-  compile-once tombstone pass over the live full edge buffer ((min, max)
-  key match, shape-bucketed like every other program), followed by the
-  certificate-hit rule, one registry-driven loop over the live
-  certificates: a certificate none of whose edges died is untouched and
-  serving stays warm (the common dense-graph case — certificates hold
-  ≤ 2(n−1) of the E edges); a certificate that lost an edge is rebuilt
-  from the surviving buffer through its already-cached load program
-  (DESIGN.md §Decremental).
+* **observable** — every device dispatch is wrapped in a tracer span
+  named for its pipeline stage (``stage/certificate_build/...``,
+  ``stage/merge/...``, ``stage/final/...``, ``stage/pipeline/...`` for
+  the fused one-shot programs), with a device-sync boundary so async
+  device work is billed to the stage that launched it; the traced jaxprs
+  carry matching ``jax.named_scope`` labels (DESIGN.md §Observability).
+  Tracing is off by default (``repro.obs.NULL_TRACER`` — a no-op) and
+  enabling it adds no retraces: spans live outside the traced functions
+  and appear in no cache key. ``snapshot()`` is the one rollup dict
+  (cache counters + hit rate + live rebuild counters) serving code
+  consumes.
+
+The engine is layered across three modules (the serving split,
+DESIGN.md §Engine): ``state.py`` (counters + live-graph state),
+``dispatch.py`` (program cache + program builders, where the
+``named_scope`` stage labels live), and this file (the ``BridgeEngine``
+orchestration: bucketing, cache keys, substrate selection, spans).
 
 Bucketing the vertex count is sound because every stage treats the extra
 vertices as isolated: they join no component, appear on no tour, and can
@@ -60,57 +55,36 @@ device code is mask-aware by construction (see DESIGN.md §Buffers).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.connectivity.common import tour_state
 from repro.connectivity.registry import get_analysis
-from repro.core.certificate import certificate_capacity
 from repro.core.certs import (
     certificate_names,
     get_certificate,
     primary_certificate,
 )
-from repro.engine.batched import (
-    BatchedEdgeList,
-    make_analysis_fn,
-    make_batched_pipeline,
-    normalize_kind,
+from repro.engine.batched import BatchedEdgeList, normalize_kind
+from repro.engine.dispatch import (
+    ProgramCache,
+    build_analysis_program,
+    build_append_program,
+    build_batched_program,
+    build_cert_insert_program,
+    build_cert_load_program,
+    build_delete_program,
+    build_distributed_program,
+    build_final_program,
 )
-from repro.graph.datastructs import (
-    EdgeList,
-    bucket_capacity,
-    compact_edges,
-    concat_edges,
-    tombstone_mask,
-)
+from repro.engine.state import EngineStats, LiveState, masked_arrays
+from repro.graph.datastructs import EdgeList, bucket_capacity
+from repro.obs import get_tracer
 
-
-@dataclasses.dataclass
-class EngineStats:
-    """Program-cache counters.
-
-    ``hits``/``misses`` count engine program-cache lookups; ``traces`` counts
-    actual jax retraces (the counter increments inside the traced Python body,
-    so it only ticks when XLA really re-traces — the no-retrace assertion).
-    """
-
-    hits: int = 0
-    misses: int = 0
-    traces: int = 0
-
-    def reset(self) -> None:
-        self.hits = self.misses = self.traces = 0
-
-
-def _masked_arrays(out):
-    """(src, dst, mask) device buffers -> host (src[mask], dst[mask])."""
-    s, d, m = (np.asarray(x) for x in out)
-    return s[m], d[m]
+__all__ = ["BridgeEngine", "EngineStats", "analyze_batch",
+           "find_bridges_batch", "get_default_engine"]
 
 
 class BridgeEngine:
@@ -150,8 +124,13 @@ class BridgeEngine:
             self.certificate = get_certificate(certificate).name
         self.backend = jax.default_backend()
         self.stats = EngineStats()
-        self._programs: dict[tuple, object] = {}
-        self._live: dict | None = None
+        self._cache = ProgramCache(self.stats)
+        self._live: LiveState | None = None
+
+    @property
+    def _programs(self) -> dict:
+        # pre-split spelling of the program store, kept for tooling
+        return self._cache._programs
 
     def _resolve_certificate(self, analysis, override: str | None = None) -> str:
         """The certificate serving ``analysis``: its declared default,
@@ -195,21 +174,30 @@ class BridgeEngine:
     # ------------------------------------------------------------------ cache
     def _program(self, key: tuple, build):
         """Compile-once: build on first use, count hits afterwards."""
-        fn = self._programs.get(key)
-        if fn is None:
-            self.stats.misses += 1
-            fn = self._programs[key] = build()
-        else:
-            self.stats.hits += 1
-        return fn
+        return self._cache.get(key, build)
 
     def cache_info(self) -> dict:
         return {
-            "programs": len(self._programs),
+            "programs": len(self._cache),
             "hits": self.stats.hits,
             "misses": self.stats.misses,
             "traces": self.stats.traces,
         }
+
+    def snapshot(self) -> dict:
+        """THE engine rollup: program-cache counters + hit rate, and (when
+        a live graph is loaded) the per-certificate rebuild counters with
+        their total — one dict for serving reports and benchmark records
+        (``serve_bridges``, ``fig6_engine``; DESIGN.md §Observability).
+        Counter semantics match ``cache_info``/``live_rebuilds`` exactly.
+        """
+        snap = {"programs": len(self._cache), **self.stats.snapshot()}
+        if self._live is not None:
+            rebuilds = dict(self._live.rebuilds)
+            snap["rebuilds"] = rebuilds
+            snap["rebuilds_total"] = sum(rebuilds.values())
+            snap["live_graph_edges"] = self._live.count
+        return snap
 
     def _bucket(self, m: int) -> int:
         return bucket_capacity(m, self.min_bucket)
@@ -226,14 +214,6 @@ class BridgeEngine:
         return EdgeList.from_arrays(ks, kd, n_nodes, capacity=kcap), kcap
 
     # ---------------------------------------------------------- single device
-    def _build_single(self, n_bucket: int, kind: str, final: str,
-                      with_delete: bool = False,
-                      certificate: str | None = None):
-        return jax.jit(make_analysis_fn(n_bucket, kind, final,
-                                        self._tick_trace,
-                                        with_delete=with_delete,
-                                        certificate=certificate))
-
     def analyze(self, src, dst, n_nodes: int, *, kind: str = "bridges",
                 final: str = "device", seed: int = 0, delete=None,
                 certificate: str | None = None):
@@ -271,27 +251,34 @@ class BridgeEngine:
                                              final=final, seed=seed,
                                              delete=delete,
                                              certificate=certificate)
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        n_bucket = self._bucket(n_nodes)
-        cap = self._bucket(max(len(src), 1))
-        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        args = (el.src, el.dst, el.mask)
-        kcap = None
-        if delete is not None:
-            kel, kcap = self._delete_keys(delete, n_bucket)
-            args += (kel.src, kel.dst, kel.mask)
-        cert_name = self._program_certificate(analysis, final, certificate)
-        key = ("single", kind, final, n_bucket, cap, kcap, self.backend,
-               cert_name)
-        fn = self._program(
-            key, lambda: self._build_single(n_bucket, kind, final,
-                                            with_delete=kcap is not None,
-                                            certificate=cert_name))
-        out = fn(*args)
-        if final == "host":
-            return analysis.host_fn(*_masked_arrays(out), n_nodes)
-        return analysis.to_result(out, n_nodes)
+        tr = get_tracer()
+        with tr.span(f"engine/analyze/{kind}", substrate="single",
+                     final=final):
+            with tr.span("stage/pad"):
+                src = np.asarray(src, np.int32)
+                dst = np.asarray(dst, np.int32)
+                n_bucket = self._bucket(n_nodes)
+                cap = self._bucket(max(len(src), 1))
+                el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+                args = (el.src, el.dst, el.mask)
+                kcap = None
+                if delete is not None:
+                    kel, kcap = self._delete_keys(delete, n_bucket)
+                    args += (kel.src, kel.dst, kel.mask)
+            cert_name = self._program_certificate(analysis, final, certificate)
+            key = ("single", kind, final, n_bucket, cap, kcap, self.backend,
+                   cert_name)
+            fn = self._program(
+                key, lambda: build_analysis_program(
+                    n_bucket, kind, final, self._tick_trace,
+                    with_delete=kcap is not None, certificate=cert_name))
+            with tr.span(f"stage/pipeline/{kind}", n_bucket=n_bucket,
+                         cap=cap, certificate=cert_name) as sp:
+                out = sp.sync(fn(*args))
+            with tr.span("stage/convert"):
+                if final == "host":
+                    return analysis.host_fn(*masked_arrays(out), n_nodes)
+                return analysis.to_result(out, n_nodes)
 
     def find_bridges(self, src, dst, n_nodes: int, *, final: str = "device",
                      seed: int = 0) -> set[tuple[int, int]]:
@@ -346,49 +333,57 @@ class BridgeEngine:
         if len(ns) != len(graphs):
             raise ValueError(
                 f"{len(graphs)} graphs but {len(ns)} vertex counts")
-        n_bucket = self._bucket(max(ns))
-        cap = self._bucket(max(max((len(s) for s, _ in graphs), default=1), 1))
-        b_bucket = bucket_capacity(len(graphs), 1)
-        bel = BatchedEdgeList.from_graphs(graphs, n_bucket, capacity=cap,
-                                          batch_pad=b_bucket)
-        args = (bel.src, bel.dst, bel.mask)
-        kcap = None
-        if delete is not None:
-            delete = list(delete)
-            if len(delete) != len(graphs):
-                raise ValueError(
-                    f"{len(graphs)} graphs but {len(delete)} deletion lists")
-            empty = (np.zeros(0, np.int32), np.zeros(0, np.int32))
-            keys = [empty if sd is None else sd for sd in delete]
-            kcap = self._bucket(max((len(s) for s, _ in keys), default=1))
-            kel = BatchedEdgeList.from_graphs(keys, n_bucket, capacity=kcap,
-                                              batch_pad=b_bucket)
-            args += (kel.src, kel.dst, kel.mask)
-        cert_name = self._program_certificate(analysis, final, certificate)
-        key = ("batch", kind, final, n_bucket, cap, b_bucket, kcap,
-               self.backend, cert_name)
-        fn = self._program(
-            key,
-            lambda: make_batched_pipeline(n_bucket, final=final,
-                                          on_trace=self._tick_trace,
-                                          kind=kind,
-                                          with_delete=kcap is not None,
-                                          certificate=cert_name),
-        )
-        out_dev = fn(*args)
-        stacked = (tuple(np.asarray(x) for x in out_dev)
-                   if isinstance(out_dev, (tuple, list))
-                   else (np.asarray(out_dev),))
-        out = []
-        for i, n in enumerate(ns):
-            row = tuple(x[i] for x in stacked)
-            if final == "host":
-                s, d, m = row
-                out.append(analysis.host_fn(s[m], d[m], n))
-            else:
-                out.append(analysis.to_result(
-                    row if len(row) > 1 else row[0], n))
-        return out
+        tr = get_tracer()
+        with tr.span(f"engine/analyze_batch/{kind}", substrate="batched",
+                     batch=len(graphs), final=final):
+            with tr.span("stage/pad"):
+                n_bucket = self._bucket(max(ns))
+                cap = self._bucket(
+                    max(max((len(s) for s, _ in graphs), default=1), 1))
+                b_bucket = bucket_capacity(len(graphs), 1)
+                bel = BatchedEdgeList.from_graphs(graphs, n_bucket,
+                                                  capacity=cap,
+                                                  batch_pad=b_bucket)
+                args = (bel.src, bel.dst, bel.mask)
+                kcap = None
+                if delete is not None:
+                    delete = list(delete)
+                    if len(delete) != len(graphs):
+                        raise ValueError(f"{len(graphs)} graphs but "
+                                         f"{len(delete)} deletion lists")
+                    empty = (np.zeros(0, np.int32), np.zeros(0, np.int32))
+                    keys = [empty if sd is None else sd for sd in delete]
+                    kcap = self._bucket(
+                        max((len(s) for s, _ in keys), default=1))
+                    kel = BatchedEdgeList.from_graphs(keys, n_bucket,
+                                                      capacity=kcap,
+                                                      batch_pad=b_bucket)
+                    args += (kel.src, kel.dst, kel.mask)
+            cert_name = self._program_certificate(analysis, final, certificate)
+            key = ("batch", kind, final, n_bucket, cap, b_bucket, kcap,
+                   self.backend, cert_name)
+            fn = self._program(
+                key, lambda: build_batched_program(
+                    n_bucket, kind, final, self._tick_trace,
+                    with_delete=kcap is not None, certificate=cert_name))
+            with tr.span(f"stage/pipeline/{kind}", n_bucket=n_bucket,
+                         cap=cap, batch=b_bucket,
+                         certificate=cert_name) as sp:
+                out_dev = sp.sync(fn(*args))
+            with tr.span("stage/convert"):
+                stacked = (tuple(np.asarray(x) for x in out_dev)
+                           if isinstance(out_dev, (tuple, list))
+                           else (np.asarray(out_dev),))
+                out = []
+                for i, n in enumerate(ns):
+                    row = tuple(x[i] for x in stacked)
+                    if final == "host":
+                        s, d, m = row
+                        out.append(analysis.host_fn(s[m], d[m], n))
+                    else:
+                        out.append(analysis.to_result(
+                            row if len(row) > 1 else row[0], n))
+                return out
 
     def find_bridges_batch(self, graphs, n_nodes, *, final: str = "device",
                            ) -> list[set[tuple[int, int]]]:
@@ -414,82 +409,31 @@ class BridgeEngine:
         return self.analyze_batch(graphs, n_nodes, kind="bcc")
 
     # ------------------------------------------------------------- incremental
-    def _build_cert_load(self, name: str, n_bucket: int):
-        """Program for one certificate type's ``load_state``: (src, dst,
-        mask) buffer -> live state tuple. ONE program per (certificate,
-        buffer bucket) serves the initial load, the lazy materialization,
-        and the decremental certificate-hit rebuild — the registered
-        ``load_state`` IS the rebuild program factory."""
-        desc = get_certificate(name)
-        cert_cap = certificate_capacity(n_bucket)
-
-        def run(src, dst, mask):
-            self._tick_trace()
-            return desc.load_state(EdgeList(src, dst, mask, n_bucket),
-                                   cert_cap)
-
-        return jax.jit(run)
-
     def _cert_load(self, name: str, n_bucket: int, buffers) -> tuple:
         """Run the cached load/rebuild program for ``name`` on an edge
-        buffer's shape bucket; returns the live state tuple."""
+        buffer's shape bucket; returns the live state tuple. Span:
+        ``stage/certificate_build/<name>`` (initial load, lazy
+        materialization, and decremental rebuild all land here — the
+        paper's per-machine certificate-build cost term)."""
         s, d, m = buffers
         key = ("cert_load", name, n_bucket, s.shape[0], self.backend, None)
-        fn = self._program(key,
-                           lambda: self._build_cert_load(name, n_bucket))
-        return tuple(fn(s, d, m))
+        fn = self._program(
+            key, lambda: build_cert_load_program(name, n_bucket,
+                                                 self._tick_trace))
+        with get_tracer().span(f"stage/certificate_build/{name}",
+                               n_bucket=n_bucket) as sp:
+            return tuple(sp.sync(fn(s, d, m)))
 
-    def _build_cert_insert(self, name: str, n_bucket: int):
-        """Program for one certificate type's ``fold_state``: live state +
-        delta buffer -> updated state. For the warm-start Borůvka pair the
-        fold scans only the delta; for the rescan certificates (sfs,
-        hybrid) it re-certifies the bounded cert ∪ delta union — O(n + Δ)
-        either way, never O(E), with the same shape every call."""
-        desc = get_certificate(name)
-        cert_cap = certificate_capacity(n_bucket)
-
-        def run(*args):
-            self._tick_trace()
-            state, (rs, rd, rm) = args[:-3], args[-3:]
-            return desc.fold_state(state, EdgeList(rs, rd, rm, n_bucket),
-                                   cert_cap)
-
-        return jax.jit(run)
-
-    def _build_append(self, n_bucket: int, out_cap: int):
-        """Compact-append the delta into the live full buffer: tombstoned
-        holes are reclaimed, real edges land at the front, and the output
-        capacity is a host-chosen bucket (same as the input except when the
-        live edge count crosses it — the only churn event that compiles a
-        new program)."""
-
-        def run(fs, fd, fm, rs, rd, rm):
-            self._tick_trace()
-            out = compact_edges(
-                concat_edges(EdgeList(fs, fd, fm, n_bucket),
-                             EdgeList(rs, rd, rm, n_bucket)), out_cap)
-            return out.src, out.dst, out.mask
-
-        return jax.jit(run)
-
-    def _build_delete(self):
-        """Tombstone pass: mask matched (min, max) keys out of a buffer and
-        count the kills. Shared by the full-buffer deletion and the
-        certificate-hit probe (same program per (capacity, key-bucket))."""
-
-        def run(s, d, m, ks, kd, km):
-            self._tick_trace()
-            return tombstone_mask(s, d, m, ks, kd, km)
-
-        return jax.jit(run)
-
-    def _delete_pass(self, buffers, keys):
+    def _delete_pass(self, buffers, keys, target: str):
         """Run the cached tombstone program for ``buffers``' shape bucket.
-        Returns (new_mask, removed-count device scalar)."""
+        Returns (new_mask, removed-count device scalar). Span:
+        ``stage/tombstone`` with the probed buffer named in ``target``."""
         s, d, m = buffers
         key = ("delete", s.shape[0], keys.capacity, self.backend, None)
-        fn = self._program(key, lambda: self._build_delete())
-        return fn(s, d, m, keys.src, keys.dst, keys.mask)
+        fn = self._program(key,
+                           lambda: build_delete_program(self._tick_trace))
+        with get_tracer().span("stage/tombstone", target=target) as sp:
+            return sp.sync(fn(s, d, m, keys.src, keys.dst, keys.mask))
 
     def _materialize(self, name: str) -> tuple:
         """Lazy certificates (``Certificate.lazy``, e.g. the scan-first and
@@ -499,24 +443,12 @@ class BridgeEngine:
         per delta (and rebuilt from the full buffer when a deletion kills
         one of its edges)."""
         live = self._live
-        state = live["certs"].get(name)
+        state = live.certs.get(name)
         if state is None:
-            state = live["certs"][name] = self._cert_load(
-                name, live["n_bucket"], live["full"])
-            live["rebuilds"].setdefault(name, 0)
+            state = live.certs[name] = self._cert_load(
+                name, live.n_bucket, live.full)
+            live.rebuilds.setdefault(name, 0)
         return state
-
-    def _build_final(self, n_bucket: int, kind: str):
-        """Final analysis stage over the kind's live certificate."""
-        analysis = get_analysis(kind)
-        out_cap = max(n_bucket - 1, 1)
-
-        def run(cs, cd, cm):
-            self._tick_trace()
-            st = tour_state(cs, cd, cm, n_bucket)
-            return analysis.device_fn(cs, cd, cm, n_bucket, st, out_cap)
-
-        return jax.jit(run)
 
     def load(self, src, dst, n_nodes: int) -> "BridgeEngine":
         """Set the engine's live graph: every EAGER certificate in the
@@ -529,22 +461,20 @@ class BridgeEngine:
         if self.mesh is not None:
             raise NotImplementedError(
                 "incremental updates are single-device; use mesh=None")
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        n_bucket = self._bucket(n_nodes)
-        cap = self._bucket(max(len(src), 1))
-        el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
-        full = (el.src, el.dst, el.mask)
-        self._live = {
-            "certs": {}, "rebuilds": {}, "full": full,
-            "count": len(src),
-            "n_nodes": int(n_nodes), "n_bucket": n_bucket,
-        }
-        for name in certificate_names():
-            if get_certificate(name).lazy:
-                self._live["certs"][name] = None
-            else:
-                self._materialize(name)
+        with get_tracer().span("engine/load"):
+            src = np.asarray(src, np.int32)
+            dst = np.asarray(dst, np.int32)
+            n_bucket = self._bucket(n_nodes)
+            cap = self._bucket(max(len(src), 1))
+            el = EdgeList.from_arrays(src, dst, n_bucket, capacity=cap)
+            self._live = LiveState(
+                certs={}, rebuilds={}, full=(el.src, el.dst, el.mask),
+                count=len(src), n_nodes=int(n_nodes), n_bucket=n_bucket)
+            for name in certificate_names():
+                if get_certificate(name).lazy:
+                    self._live.certs[name] = None
+                else:
+                    self._materialize(name)
         return self
 
     @property
@@ -554,7 +484,7 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         return int(np.asarray(
-            self._live["certs"][primary_certificate()][2]).sum())
+            self._live.certs[primary_certificate()][2]).sum())
 
     @property
     def num_live_graph_edges(self) -> int:
@@ -562,7 +492,7 @@ class BridgeEngine:
         tracked on host — no device sync."""
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
-        return self._live["count"]
+        return self._live.count
 
     @property
     def live_rebuilds(self) -> dict:
@@ -572,7 +502,7 @@ class BridgeEngine:
         free' (DESIGN.md §Decremental)."""
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
-        return dict(self._live["rebuilds"])
+        return dict(self._live.rebuilds)
 
     def insert_edges(self, src, dst, *, final: str = "device",
                      kind: str = "bridges", certificate: str | None = None):
@@ -597,37 +527,45 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
-        n_bucket = live["n_bucket"]
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        delta_cap = self._bucket(max(len(src), 1))
-        recv = EdgeList.from_arrays(src, dst, n_bucket, capacity=delta_cap)
-        for name, state in live["certs"].items():
-            if state is None:
-                continue
-            key = ("cert_insert", name, n_bucket, delta_cap, self.backend,
-                   None)
-            fn = self._program(
-                key,
-                lambda name=name: self._build_cert_insert(name, n_bucket))
-            live["certs"][name] = tuple(fn(*state, recv.src, recv.dst,
-                                           recv.mask))
-        # Keep the live FULL buffer current: compact-append the delta,
-        # reclaiming tombstoned holes. The edge count is tracked on host so
-        # the output bucket (and thus a possible grow-retrace) is a static
-        # shape decision; same-bucket churn reuses one compiled program.
-        fs, fd, fm = live["full"]
-        needed = live["count"] + len(src)
-        out_cap = (fs.shape[0] if needed <= fs.shape[0]
-                   else bucket_capacity(needed, self.min_bucket))
-        akey = ("append", n_bucket, fs.shape[0], delta_cap, out_cap,
-                self.backend)
-        afn = self._program(
-            akey, lambda: self._build_append(n_bucket, out_cap))
-        live["full"] = tuple(afn(fs, fd, fm, recv.src, recv.dst, recv.mask))
-        live["count"] = needed
-        return self.current_analysis(kind=kind, final=final,
-                                     certificate=certificate)
+        n_bucket = live.n_bucket
+        tr = get_tracer()
+        with tr.span("engine/insert_edges", kind=kind):
+            src = np.asarray(src, np.int32)
+            dst = np.asarray(dst, np.int32)
+            delta_cap = self._bucket(max(len(src), 1))
+            recv = EdgeList.from_arrays(src, dst, n_bucket,
+                                        capacity=delta_cap)
+            for name, state in live.certs.items():
+                if state is None:
+                    continue
+                key = ("cert_insert", name, n_bucket, delta_cap,
+                       self.backend, None)
+                fn = self._program(
+                    key, lambda name=name: build_cert_insert_program(
+                        name, n_bucket, self._tick_trace))
+                with tr.span(f"stage/merge/{name}", delta=delta_cap) as sp:
+                    live.certs[name] = tuple(sp.sync(
+                        fn(*state, recv.src, recv.dst, recv.mask)))
+            # Keep the live FULL buffer current: compact-append the delta,
+            # reclaiming tombstoned holes. The edge count is tracked on host
+            # so the output bucket (and thus a possible grow-retrace) is a
+            # static shape decision; same-bucket churn reuses one compiled
+            # program.
+            fs, fd, fm = live.full
+            needed = live.count + len(src)
+            out_cap = (fs.shape[0] if needed <= fs.shape[0]
+                       else bucket_capacity(needed, self.min_bucket))
+            akey = ("append", n_bucket, fs.shape[0], delta_cap, out_cap,
+                    self.backend)
+            afn = self._program(
+                akey, lambda: build_append_program(n_bucket, out_cap,
+                                                   self._tick_trace))
+            with tr.span("stage/append") as sp:
+                live.full = tuple(sp.sync(
+                    afn(fs, fd, fm, recv.src, recv.dst, recv.mask)))
+            live.count = needed
+            return self.current_analysis(kind=kind, final=final,
+                                         certificate=certificate)
 
     def delete_edges(self, src, dst, *, final: str = "device",
                      kind: str = "bridges", certificate: str | None = None):
@@ -673,27 +611,28 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
-        n_bucket = live["n_bucket"]
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        kcap = self._bucket(max(len(src), 1))
-        keys = EdgeList.from_arrays(src, dst, n_bucket, capacity=kcap)
+        n_bucket = live.n_bucket
+        with get_tracer().span("engine/delete_edges", kind=kind):
+            src = np.asarray(src, np.int32)
+            dst = np.asarray(dst, np.int32)
+            kcap = self._bucket(max(len(src), 1))
+            keys = EdgeList.from_arrays(src, dst, n_bucket, capacity=kcap)
 
-        fs, fd, fm = live["full"]
-        fm, removed = self._delete_pass((fs, fd, fm), keys)
-        live["full"] = (fs, fd, fm)
-        live["count"] -= int(removed)
+            fs, fd, fm = live.full
+            fm, removed = self._delete_pass((fs, fd, fm), keys, "full")
+            live.full = (fs, fd, fm)
+            live.count -= int(removed)
 
-        for name, state in live["certs"].items():
-            if state is None:
-                continue
-            _, hits = self._delete_pass(state[:3], keys)
-            if int(hits):
-                live["rebuilds"][name] += 1
-                live["certs"][name] = self._cert_load(name, n_bucket,
-                                                      live["full"])
-        return self.current_analysis(kind=kind, final=final,
-                                     certificate=certificate)
+            for name, state in live.certs.items():
+                if state is None:
+                    continue
+                _, hits = self._delete_pass(state[:3], keys, name)
+                if int(hits):
+                    live.rebuilds[name] += 1
+                    live.certs[name] = self._cert_load(name, n_bucket,
+                                                       live.full)
+            return self.current_analysis(kind=kind, final=final,
+                                         certificate=certificate)
 
     def current_analysis(self, kind: str = "bridges", *,
                          final: str = "device",
@@ -713,16 +652,22 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
-        cert = self._materialize(
-            self._resolve_certificate(analysis, certificate))[:3]
-        if final == "host":
-            s, d, m = (np.asarray(x) for x in cert)
-            return analysis.host_fn(s[m], d[m], live["n_nodes"])
-        key = ("final", kind, live["n_bucket"], self.backend, None)
-        fn = self._program(
-            key, lambda: self._build_final(live["n_bucket"], kind))
-        out = fn(*cert)
-        return analysis.to_result(out, live["n_nodes"])
+        tr = get_tracer()
+        with tr.span(f"engine/current/{kind}", final=final):
+            cert = self._materialize(
+                self._resolve_certificate(analysis, certificate))[:3]
+            if final == "host":
+                with tr.span("stage/convert"):
+                    s, d, m = (np.asarray(x) for x in cert)
+                    return analysis.host_fn(s[m], d[m], live.n_nodes)
+            key = ("final", kind, live.n_bucket, self.backend, None)
+            fn = self._program(
+                key, lambda: build_final_program(live.n_bucket, kind,
+                                                 self._tick_trace))
+            with tr.span(f"stage/final/{kind}") as sp:
+                out = sp.sync(fn(*cert))
+            with tr.span("stage/convert"):
+                return analysis.to_result(out, live.n_nodes)
 
     def current_bridges(self, *, final: str = "device") -> set[tuple[int, int]]:
         """Bridges of the live graph (final stage only)."""
@@ -732,17 +677,6 @@ class BridgeEngine:
     def _machines(self) -> int:
         return math.prod(self.mesh.shape[a] for a in self.machine_axes)
 
-    def _build_distributed(self, n_nodes: int, kind: str, final: str,
-                           with_delete: bool = False,
-                           certificate: str | None = None):
-        from repro.core.merge import build_distributed_analysis_fn
-
-        fn = build_distributed_analysis_fn(
-            self.mesh, self.machine_axes, n_nodes, schedule=self.schedule,
-            final=final, merge=self.merge, kind=kind,
-            with_deletions=with_delete, certificate=certificate)
-        return jax.jit(fn)
-
     def _analyze_distributed(self, src, dst, n_nodes: int, *, kind: str,
                              final: str, seed: int, delete=None,
                              certificate: str | None = None):
@@ -750,37 +684,51 @@ class BridgeEngine:
 
         analysis = get_analysis(kind)
         cert_name = self._resolve_certificate(analysis, certificate)
-        src = np.asarray(src, np.int32)
-        dst = np.asarray(dst, np.int32)
-        m = self._machines()
-        psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m, seed=seed)
-        shard_cap = self._bucket(psrc.shape[1])
-        pad = shard_cap - psrc.shape[1]
-        if pad:
-            psrc = np.pad(psrc, ((0, 0), (0, pad)))
-            pdst = np.pad(pdst, ((0, 0), (0, pad)))
-            pmask = np.pad(pmask, ((0, 0), (0, pad)))
-        args = (jnp.asarray(psrc), jnp.asarray(pdst), jnp.asarray(pmask))
-        kcap = None
-        if delete is not None:
-            # deletion keys are global: replicate to every machine, each
-            # tombstones its own shard before certifying (core/merge.py)
-            kel, kcap = self._delete_keys(delete, n_nodes)
-            args += (kel.src, kel.dst, kel.mask)
-        key = ("dist", kind, n_nodes, shard_cap, kcap, self.backend,
-               self.schedule, final, self.merge, cert_name)
-        fn = self._program(
-            key, lambda: self._build_distributed(n_nodes, kind, final,
-                                                 with_delete=kcap is not None,
-                                                 certificate=cert_name))
-        with jax.set_mesh(self.mesh):
-            out = fn(*args)
-        # machine 0 (paper) — or any machine under xor/hierarchical — answers
-        shard0 = jax.tree_util.tree_map(lambda x: np.asarray(x)[0], out)
-        if final == "host":
-            s, d, mk = shard0
-            return analysis.host_fn(s[mk], d[mk], n_nodes)
-        return analysis.to_result(shard0, n_nodes)
+        tr = get_tracer()
+        with tr.span(f"engine/analyze/{kind}", substrate="distributed",
+                     schedule=self.schedule, final=final):
+            with tr.span("stage/partition", machines=self._machines()):
+                src = np.asarray(src, np.int32)
+                dst = np.asarray(dst, np.int32)
+                m = self._machines()
+                psrc, pdst, pmask = partition_edges(src, dst, n_nodes, m,
+                                                    seed=seed)
+                shard_cap = self._bucket(psrc.shape[1])
+                pad = shard_cap - psrc.shape[1]
+                if pad:
+                    psrc = np.pad(psrc, ((0, 0), (0, pad)))
+                    pdst = np.pad(pdst, ((0, 0), (0, pad)))
+                    pmask = np.pad(pmask, ((0, 0), (0, pad)))
+                args = (jnp.asarray(psrc), jnp.asarray(pdst),
+                        jnp.asarray(pmask))
+                kcap = None
+                if delete is not None:
+                    # deletion keys are global: replicate to every machine,
+                    # each tombstones its own shard before certifying
+                    # (core/merge.py)
+                    kel, kcap = self._delete_keys(delete, n_nodes)
+                    args += (kel.src, kel.dst, kel.mask)
+            key = ("dist", kind, n_nodes, shard_cap, kcap, self.backend,
+                   self.schedule, final, self.merge, cert_name)
+            fn = self._program(
+                key, lambda: build_distributed_program(
+                    self.mesh, self.machine_axes, n_nodes, kind, final,
+                    self.schedule, self.merge, with_delete=kcap is not None,
+                    certificate=cert_name))
+            with tr.span(f"stage/pipeline/{kind}", substrate="distributed",
+                         schedule=self.schedule, machines=m,
+                         certificate=cert_name) as sp:
+                with jax.set_mesh(self.mesh):
+                    out = sp.sync(fn(*args))
+            with tr.span("stage/convert"):
+                # machine 0 (paper) — or any machine under xor/hierarchical
+                # — answers
+                shard0 = jax.tree_util.tree_map(
+                    lambda x: np.asarray(x)[0], out)
+                if final == "host":
+                    s, d, mk = shard0
+                    return analysis.host_fn(s[mk], d[mk], n_nodes)
+                return analysis.to_result(shard0, n_nodes)
 
 
 _DEFAULT_ENGINE: BridgeEngine | None = None

@@ -1,0 +1,77 @@
+"""Engine state layer: program-cache counters + the live-graph state.
+
+Split out of ``engine.py`` (DESIGN.md §Engine): this module owns the two
+pieces of mutable state the engine carries between calls — the
+``EngineStats`` counters that back the no-retrace serving assertion, and
+the ``LiveState`` holding the device-resident full edge buffer plus the
+per-certificate live states for incremental/decremental serving. The
+dispatch layer (``dispatch.py``) owns the compiled programs; the engine
+(``engine.py``) composes the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Program-cache counters.
+
+    ``hits``/``misses`` count engine program-cache lookups; ``traces`` counts
+    actual jax retraces (the counter increments inside the traced Python body,
+    so it only ticks when XLA really re-traces — the no-retrace assertion).
+    """
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.traces = 0
+
+    def snapshot(self) -> dict:
+        """Counter dict + derived hit rate — the ONE rollup serving code
+        consumes (``BridgeEngine.snapshot`` merges it with the live-state
+        counters; ``serve_bridges``/``fig6_engine`` must not re-derive)."""
+        lookups = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "traces": self.traces,
+            "hit_rate": self.hits / lookups if lookups else None,
+        }
+
+
+@dataclasses.dataclass
+class LiveState:
+    """The engine's live graph (``load``/``insert_edges``/``delete_edges``).
+
+    certs    : per-certificate live state tuples (``None`` = lazy,
+               unmaterialized — see ``core.certs``)
+    rebuilds : per-certificate certificate-hit rebuild counters, one entry
+               per MATERIALIZED certificate (DESIGN.md §Decremental)
+    full     : the device-resident (src, dst, mask) full edge buffer — the
+               tombstone target and decremental rebuild source
+    count    : live edge count (inserts minus deletions), host-tracked so
+               bucket-growth is a static shape decision with no device sync
+    """
+
+    certs: dict
+    rebuilds: dict
+    full: tuple
+    count: int
+    n_nodes: int
+    n_bucket: int
+
+    def __getitem__(self, key: str):
+        # dict-style access kept for the pre-split ``engine._live["..."]``
+        # spelling (tests and tooling poke e.g. ``_live["n_bucket"]``)
+        return getattr(self, key)
+
+
+def masked_arrays(out):
+    """(src, dst, mask) device buffers -> host (src[mask], dst[mask])."""
+    s, d, m = (np.asarray(x) for x in out)
+    return s[m], d[m]

@@ -11,10 +11,22 @@ served on every substrate now (DESIGN.md §Analysis registry); the report
 carries each kind's substrate row — which certificate it merges over and
 whether single/batched/incremental/distributed serving applies — so
 dashboards can track the substrate matrix. ``--json`` writes the per-kind
-rates plus the engine's cache hit/miss/trace counters; each kind's row
+rates plus the engine's ``snapshot()`` rollup (programs/hits/misses/
+traces/hit_rate — one dict, never re-derived here); each kind's row
 also carries ``kernel_path`` — the backend (``pallas`` | ``interpret`` |
 ``oracle``) the certificate's fused per-round edge scan resolved to for
 the served requests (DESIGN.md §Kernels).
+
+Every request is also timed into fixed-bucket latency HISTOGRAMS — per
+kind and per served certificate, one histogram per serving phase — and
+the report/JSON carry their p50/p95/p99 (``repro.obs.metrics``; DESIGN.md
+§Observability). The warm single-query phase asserts no-retrace from the
+engine's ``traces`` counter, and the assertion holds with tracing
+enabled: ``--trace-out PATH`` turns on the span tracer for the whole run
+and writes the Chrome-trace JSON (open in Perfetto/chrome://tracing)
+plus a per-stage rollup; ``--profile-dir DIR`` additionally captures a
+``jax.profiler`` device trace whose ``named_scope`` labels line up with
+the span names.
 
 ``--workload churn`` makes the incremental phase interleave link FAILURES
 (``delete_edges``, at ``--delete-ratio``) with the inserts — the paper's
@@ -42,11 +54,13 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.connectivity.registry import analysis_kinds, get_analysis
 from repro.core.certs import certificate_names
 from repro.engine import BridgeEngine
 from repro.graph import generators as gen
 from repro.kernels.boruvka_round import kernel_path
+from repro.obs import MetricsRegistry, profiler_trace
 
 #: CLI spellings: canonical kinds, with '-' aliases for the shell
 KINDS = tuple(k.replace("_", "-") for k in analysis_kinds())
@@ -104,16 +118,38 @@ def _same(kind: str, got, want) -> bool:
     return got == want
 
 
-def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
-    """Batched + single + incremental serving for one analysis kind."""
+def serve_kind(engine: BridgeEngine, kind: str, queries, args,
+               metrics: MetricsRegistry) -> dict:
+    """Batched + single + incremental serving for one analysis kind.
+
+    Every dispatch lands in a latency histogram — per kind AND per served
+    certificate, one per serving phase — from which the report's
+    p50/p95/p99 come. The warm single-query phase (everything after its
+    first, program-compiling request) asserts NO retraces off the
+    engine's ``traces`` counter; the assertion must hold with the span
+    tracer enabled (spans never enter a cache key).
+    """
     analysis = get_analysis(kind)
     host_ref = analysis.host_fn
     # which backend the certificate's per-round edge scan resolves to for
     # every request served below (pallas | interpret | oracle) — perf
     # numbers in the JSON report are attributable to a kernel code path
+    cert = engine.certificate_for(kind)
     stats: dict = {"kind": kind, "substrates": substrates(kind, engine),
-                   "certificate": engine.certificate_for(kind),
+                   "certificate": cert,
                    "kernel_path": kernel_path()}
+    hists = {phase: metrics.histogram(f"serve/{kind}/{phase}_s")
+             for phase in ("batched", "single", "update")}
+    cert_hists = {phase: metrics.histogram(f"serve/cert/{cert}/{phase}_s")
+                  for phase in ("batched", "single", "update")}
+
+    def timed(phase, fn, *a, **kw):
+        t0 = time.perf_counter()
+        out = fn(*a, **kw)
+        dt = time.perf_counter() - t0
+        hists[phase].observe(dt)
+        cert_hists[phase].observe(dt)
+        return out
 
     # ---- batched serving -------------------------------------------------
     t_cold = None
@@ -121,9 +157,9 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
     served = 0
     for start in range(0, len(queries), args.batch):
         chunk = queries[start:start + args.batch]
-        got = engine.analyze_batch(
-            [(s, d) for s, d, _ in chunk], [nq for _, _, nq in chunk],
-            kind=kind)
+        got = timed("batched", engine.analyze_batch,
+                    [(s, d) for s, d, _ in chunk], [nq for _, _, nq in chunk],
+                    kind=kind)
         if args.verify:
             s, d, nq = chunk[0]
             want = host_ref(s, d, nq)
@@ -146,13 +182,23 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
 
     # ---- single-query serving (same engine: programs already cached) -----
     t0 = time.perf_counter()
-    for s, d, nq in queries:
-        engine.analyze(s, d, nq, kind=kind)
+    warm_traces = None
+    for i, (s, d, nq) in enumerate(queries):
+        timed("single", engine.analyze, s, d, nq, kind=kind)
+        if i == 0:
+            # the first single query may compile this kind's single-graph
+            # program; every request after it must be retrace-free
+            warm_traces = engine.stats.traces
     dt = time.perf_counter() - t0
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"{kind}: {retraces} retrace(s) during warm single-query serving")
     single_qps = len(queries) / max(dt, 1e-9)
     print(f"[{kind:11s}] single   : {len(queries)} queries | "
-          f"{single_qps:.1f} queries/s", flush=True)
-    stats["single"] = {"queries": len(queries), "qps": single_qps}
+          f"{single_qps:.1f} queries/s | warm retraces {retraces}",
+          flush=True)
+    stats["single"] = {"queries": len(queries), "qps": single_qps,
+                       "warm_retraces": retraces}
 
     # ---- incremental serving (every registry kind rides the live state:
     # 2-edge kinds off the warm-start Borůvka pair, cuts/bcc off the live
@@ -174,13 +220,13 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
                 # fail delta_edges live links (same key bucket as inserts)
                 idx = rng.choice(len(all_s), args.delta_edges, replace=False)
                 ks, kd = all_s[idx], all_d[idx]
-                got = engine.delete_edges(ks, kd, kind=kind)
+                got = timed("update", engine.delete_edges, ks, kd, kind=kind)
                 all_s, all_d = _drop_pairs(all_s, all_d, ks, kd)
                 deletions += 1
             else:
                 ds, dd = gen.random_graph(nq0, args.delta_edges,
                                           seed=args.seed + 500 + k)
-                got = engine.insert_edges(ds, dd, kind=kind)
+                got = timed("update", engine.insert_edges, ds, dd, kind=kind)
                 all_s = np.concatenate([all_s, ds])
                 all_d = np.concatenate([all_d, dd])
         dt = time.perf_counter() - t0
@@ -200,10 +246,21 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args) -> dict:
                                 "cert_rebuilds": rebuilds,
                                 "updates_per_s": ups,
                                 "live_cert_edges": engine.num_live_edges}
+    stats["latency"] = {phase: h.snapshot() for phase, h in hists.items()
+                        if h.count}
+    print(f"[{kind:11s}] latency  : " + " | ".join(
+        f"{phase} {_pctl_str(snap)}"
+        for phase, snap in stats["latency"].items()), flush=True)
     return stats
 
 
-def certificate_report(per_kind: list) -> dict:
+def _pctl_str(snap: dict) -> str:
+    """'p50 1.2ms p95 3.4ms p99 5.6ms' from a histogram snapshot."""
+    return " ".join(f"{p} {snap[p] * 1e3:.2f}ms" for p in ("p50", "p95", "p99"))
+
+
+def certificate_report(per_kind: list, metrics: MetricsRegistry | None = None,
+                       ) -> dict:
     """Fold the per-kind rows into per-CERTIFICATE serving rates: for each
     certificate actually served, which kinds rode it, their summed
     steady-state batched + single qps, and the live rebuild counters —
@@ -228,6 +285,15 @@ def certificate_report(per_kind: list) -> dict:
         if inc:
             for cert, count in inc["cert_rebuilds"].items():
                 agg_for(by_cert, cert)["rebuilds"] += count
+    if metrics is not None:
+        # the per-CERTIFICATE latency histograms accumulated across every
+        # kind that rode the certificate (true cross-kind percentiles —
+        # NOT derivable from the per-kind snapshots)
+        for cert, agg in by_cert.items():
+            lat = {phase: metrics.histogram(f"serve/cert/{cert}/{phase}_s")
+                   for phase in ("batched", "single", "update")}
+            agg["latency"] = {phase: h.snapshot() for phase, h in lat.items()
+                              if h.count}
     return by_cert
 
 
@@ -259,7 +325,14 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="check one query per batch against the host oracle")
     ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
-                    help="write per-kind rates + engine cache counters")
+                    help="write per-kind rates + latency percentiles + the "
+                         "engine snapshot rollup")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable the span tracer for the run and write the "
+                         "Chrome-trace JSON here (Perfetto/chrome://tracing)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR "
+                         "(named_scope labels match the span names)")
     args = ap.parse_args(argv)
     if args.batch < 1 or args.queries < 1:
         ap.error("--batch and --queries must be >= 1")
@@ -273,12 +346,22 @@ def main(argv=None):
         args.deltas = min(args.deltas, 4)
 
     engine = BridgeEngine(certificate=args.certificate)
+    metrics = MetricsRegistry()
+    tracer = obs.enable_tracing() if args.trace_out else None
     queries = make_queries(args.queries, args.n, args.edges, seed=args.seed)
-    per_kind = [serve_kind(engine, kind, queries, args) for kind in kinds]
+    try:
+        with profiler_trace(args.profile_dir):
+            per_kind = [serve_kind(engine, kind, queries, args, metrics)
+                        for kind in kinds]
+    finally:
+        if tracer is not None:
+            obs.disable_tracing()
 
-    info = engine.cache_info()
-    print(f"engine   : {info['programs']} programs, {info['hits']} hits, "
-          f"{info['misses']} misses, {info['traces']} traces | "
+    # the ONE engine rollup (BridgeEngine.snapshot): cache counters + hit
+    # rate + live rebuild totals — nothing re-derived here
+    snap = engine.snapshot()
+    print(f"engine   : {snap['programs']} programs, {snap['hits']} hits, "
+          f"{snap['misses']} misses, {snap['traces']} traces | "
           f"kernel_path={kernel_path()}", flush=True)
     for row in per_kind:
         sub = row["substrates"]
@@ -288,17 +371,27 @@ def main(argv=None):
               f"incremental={sub['incremental']} "
               f"decremental={sub['decremental']} "
               f"distributed={sub['distributed']}", flush=True)
-    by_cert = certificate_report(per_kind)
+    by_cert = certificate_report(per_kind, metrics)
     for cert, agg in by_cert.items():
         print(f"cert     : {cert:11s} kinds={','.join(agg['kinds'])} "
               f"single {agg['single_qps']:.1f} q/s | batched steady "
               f"{agg['batched_steady_qps']:.1f} q/s | rebuilds "
               f"{agg['rebuilds']}", flush=True)
-    report = {"kinds": per_kind, "engine": info,
+    report = {"kinds": per_kind, "engine": snap,
               "certificates": by_cert,
+              "metrics": metrics.snapshot(),
               "config": {"batch": args.batch, "queries": args.queries,
                          "n": args.n, "edges": args.edges,
                          "certificate": args.certificate}}
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace_out)
+        stages = tracer.stage_rollup()
+        total = sum(r["total_s"] for r in stages.values())
+        print(f"trace    : {len(tracer.spans())} spans, "
+              f"{len(stages)} stages, {total:.3f}s staged | "
+              f"wrote {args.trace_out}", flush=True)
+        report["trace"] = {"path": args.trace_out, "spans": len(tracer.spans()),
+                           "stage_rollup": stages}
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump(report, f, indent=2)

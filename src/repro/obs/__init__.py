@@ -1,0 +1,93 @@
+"""repro.obs — stage-level tracing + metrics for the bridges engine.
+
+Three pieces (DESIGN.md §Observability):
+
+* **Span tracer** (``tracer.py``) — nested wall-clock spans with
+  device-sync boundaries; Chrome-trace JSON + per-stage rollups. Off by
+  default: the module-level tracer is the no-op ``NULL_TRACER`` until
+  ``enable_tracing()``; instrumented code always goes through
+  ``get_tracer()`` so flipping the switch needs no re-plumbing (and adds
+  no retraces — spans wrap host dispatch only).
+
+* **Metrics registry** (``metrics.py``) — counters, gauges, fixed-bucket
+  latency histograms with p50/p95/p99, one ``snapshot()`` dict. A
+  process-global registry backs the runtime substrate (watchdog
+  heartbeats, failure-injection counters); components that want isolation
+  (tests, per-engine serving stats) construct their own.
+
+* **Profiler hooks** (``profile.py``) — the opt-in ``jax.profiler.trace``
+  capture whose on-device timeline lines up with the span names via the
+  ``jax.named_scope`` labels threaded through the pipeline jaxprs.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_latency_buckets,
+)
+from repro.obs.profile import profiler_trace
+from repro.obs.tracer import (
+    NULL_TRACER,
+    STAGE_PREFIXES,
+    NullTracer,
+    Span,
+    Tracer,
+)
+
+_TRACER: Tracer | NullTracer = NULL_TRACER
+_METRICS = MetricsRegistry()
+
+
+def get_tracer() -> Tracer | NullTracer:
+    """The process-current tracer. Instrumented code calls this at use
+    time (never caches it), so enabling tracing mid-process takes effect
+    everywhere immediately."""
+    return _TRACER
+
+
+def enable_tracing(tracer: Tracer | None = None) -> Tracer:
+    """Install (and return) a live tracer as the process tracer."""
+    global _TRACER
+    _TRACER = tracer if tracer is not None else Tracer()
+    return _TRACER
+
+
+def disable_tracing() -> None:
+    """Back to the no-op tracer (collected spans are dropped with it
+    unless the caller kept a reference)."""
+    global _TRACER
+    _TRACER = NULL_TRACER
+
+
+def get_metrics() -> MetricsRegistry:
+    """The process-global metrics registry (watchdog heartbeats, failure
+    counters, anything fleet-level)."""
+    return _METRICS
+
+
+def snapshot() -> dict:
+    """One-call rollup of the global metrics registry."""
+    return _METRICS.snapshot()
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullTracer",
+    "NULL_TRACER",
+    "Span",
+    "STAGE_PREFIXES",
+    "Tracer",
+    "default_latency_buckets",
+    "disable_tracing",
+    "enable_tracing",
+    "get_metrics",
+    "get_tracer",
+    "profiler_trace",
+    "snapshot",
+]

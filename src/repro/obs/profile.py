@@ -1,0 +1,30 @@
+"""Opt-in on-device profiler capture (``jax.profiler.trace``).
+
+The span tracer times stages from the HOST side; this knob captures the
+matching DEVICE-side profile. Because every certificate build / merge /
+final-stage jaxpr is wrapped in a ``jax.named_scope`` carrying the same
+label as its host span (DESIGN.md §Observability has the taxonomy), an
+XProf/Perfetto capture from here maps 1:1 onto the span names in the
+Chrome trace — one run, two synchronized views of the same stages.
+
+Off by default and zero-cost when unused: the profiler is only started
+inside the context manager, and ``named_scope`` annotations are metadata
+on the jaxpr (they never change the compiled program or its cache key).
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+@contextlib.contextmanager
+def profiler_trace(logdir: str | None):
+    """``with profiler_trace(dir):`` captures a jax device profile into
+    ``dir`` (view with XProf/TensorBoard); ``None`` disables — the same
+    code path stays a no-op, which is how CLI knobs thread it through."""
+    if not logdir:
+        yield None
+        return
+    import jax
+
+    with jax.profiler.trace(str(logdir)):
+        yield logdir

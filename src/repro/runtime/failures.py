@@ -4,8 +4,15 @@
 training driver's restart loop (launch/train.py) must recover from the last
 checkpoint and converge to the same final state as an uninterrupted run —
 that equivalence is asserted in tests/test_fault_tolerance.py.
+
+Each injected failure ticks the global ``failures/injected`` counter
+(``repro.obs``), so chaos drills can confirm from one ``obs.snapshot()``
+that the failures they scheduled actually fired — a drill whose counter
+stayed flat tested nothing.
 """
 from __future__ import annotations
+
+from repro.obs import get_metrics
 
 
 class SimulatedFailure(RuntimeError):
@@ -16,8 +23,10 @@ class FailureInjector:
     def __init__(self, fail_at_steps: set[int] | None = None):
         self.fail_at = set(fail_at_steps or ())
         self.fired: set[int] = set()
+        self._counter = get_metrics().counter("failures/injected")
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
+            self._counter.inc()
             raise SimulatedFailure(f"injected host failure at step {step}")

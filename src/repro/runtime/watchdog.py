@@ -6,37 +6,64 @@ an EWMA of step time; a step exceeding ``threshold x`` the EWMA triggers the
 ``on_straggle`` callback — in production that escalates to the cluster
 controller (drain + replace host, or re-mesh via checkpoint restore; see
 launch/train.py --elastic); here it also feeds the test harness.
+
+Every ``stop()`` also HEARTBEATS through the global metrics registry
+(``repro.obs``): the step time lands in a gauge whose ``updated_at``
+timestamp is the liveness signal (``time.time() - updated_at`` staleness =
+a wedged step loop), the EWMA in a second gauge, and straggle events tick
+a counter — so a fleet dashboard reads one ``obs.snapshot()`` instead of
+polling watchdog objects (DESIGN.md §Observability). ``name`` prefixes
+the metric names so multiple loops (train, serve) coexist in the
+registry.
 """
 from __future__ import annotations
 
 import time
 
+from repro.obs import get_metrics
+
 
 class StepWatchdog:
     def __init__(self, threshold: float = 3.0, ewma: float = 0.9,
-                 warmup_steps: int = 3, on_straggle=None):
+                 warmup_steps: int = 3, on_straggle=None,
+                 name: str = "watchdog"):
         self.threshold = threshold
         self.ewma_coef = ewma
         self.warmup = warmup_steps
         self.on_straggle = on_straggle
+        self.name = name
         self.avg = None
         self.count = 0
         self.events: list[dict] = []
         self._t0 = None
+        m = get_metrics()
+        self._beat = m.gauge(f"{name}/step_s")
+        self._avg_gauge = m.gauge(f"{name}/ewma_s")
+        self._straggles = m.counter(f"{name}/straggles")
+
+    @property
+    def last_beat(self) -> float | None:
+        """Wall-clock (``time.time()``) of the last completed step — the
+        heartbeat timestamp liveness checks compare against now."""
+        return self._beat.updated_at
 
     def start(self):
         self._t0 = time.monotonic()
 
     def stop(self, step: int):
         dt = time.monotonic() - self._t0
+        self._beat.set(dt)
         self.count += 1
         if self.count <= self.warmup:
             self.avg = dt if self.avg is None else max(self.avg, dt)
+            self._avg_gauge.set(self.avg)
             return dt
         if dt > self.threshold * self.avg:
             ev = {"step": step, "dt": dt, "avg": self.avg}
             self.events.append(ev)
+            self._straggles.inc()
             if self.on_straggle:
                 self.on_straggle(ev)
         self.avg = self.ewma_coef * self.avg + (1 - self.ewma_coef) * dt
+        self._avg_gauge.set(self.avg)
         return dt

@@ -1,0 +1,293 @@
+"""Observability subsystem: span tracer, metrics registry, and the
+no-retrace / zero-overhead contracts of the instrumented engine
+(DESIGN.md §Observability)."""
+import json
+import time
+import timeit as _timeit
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+from repro.obs import (
+    NULL_TRACER,
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    default_latency_buckets,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_tracer_leak():
+    """Every test starts and ends on the disabled tracer."""
+    obs.disable_tracing()
+    yield
+    obs.disable_tracing()
+
+
+# ------------------------------------------------------------------ tracer
+def test_span_nesting_and_ordering():
+    tr = Tracer()
+    with tr.span("outer", kind="x"):
+        with tr.span("stage/a"):
+            pass
+        with tr.span("stage/b"):
+            with tr.span("stage/c"):
+                pass
+    spans = tr.spans()
+    names = [s["name"] for s in spans]
+    # slot-ordered by span START, not close
+    assert names == ["outer", "stage/a", "stage/b", "stage/c"]
+    by_name = {s["name"]: s for s in spans}
+    assert by_name["outer"]["parent"] == -1 and by_name["outer"]["depth"] == 0
+    assert by_name["stage/a"]["parent"] == by_name["outer"]["index"]
+    assert by_name["stage/c"]["parent"] == by_name["stage/b"]["index"]
+    assert by_name["stage/c"]["depth"] == 2
+    assert by_name["outer"]["attrs"] == {"kind": "x"}
+    # children are contained in the parent's time interval
+    o, c = by_name["outer"], by_name["stage/c"]
+    assert o["t0"] <= c["t0"] and c["t0"] + c["dur"] <= o["t0"] + o["dur"] + 1e-9
+
+
+def test_span_lifo_enforced():
+    tr = Tracer()
+    a = tr.span("a")
+    b = tr.span("b")
+    a.__enter__()
+    b.__enter__()
+    with pytest.raises(AssertionError, match="LIFO"):
+        a.__exit__(None, None, None)
+
+
+def test_synthetic_spans_attach_to_parent():
+    tr = Tracer()
+    with tr.span("kernel/forest/boruvka") as sp:
+        time.sleep(0.001)
+    tr.add("kernel/round/boruvka", sp.t0, sp.dur / 2, parent=sp.index,
+           round=0, model_bytes=900)
+    rounds = [s for s in tr.spans() if s["name"] == "kernel/round/boruvka"]
+    assert len(rounds) == 1
+    assert rounds[0]["parent"] == sp.index
+    assert rounds[0]["depth"] == 1
+    assert rounds[0]["attrs"]["model_bytes"] == 900
+
+
+def test_rollup_self_time_excludes_children():
+    tr = Tracer()
+    with tr.span("stage/parent"):
+        with tr.span("stage/child"):
+            time.sleep(0.005)
+    roll = tr.rollup()
+    p, c = roll["stage/parent"], roll["stage/child"]
+    assert p["count"] == 1 and c["count"] == 1
+    assert p["total_s"] >= c["total_s"]
+    assert p["self_s"] == pytest.approx(p["total_s"] - c["total_s"])
+
+
+def test_stage_rollup_outermost_only():
+    tr = Tracer()
+    with tr.span("engine/analyze"):         # container: not a stage
+        with tr.span("stage/pipeline"):     # outermost stage: counted
+            with tr.span("stage/inner"):    # nested stage: not double-billed
+                pass
+    with tr.span("kernel/forest/boruvka"):  # stage at top level: counted
+        pass
+    staged = tr.stage_rollup()
+    assert set(staged) == {"stage/pipeline", "kernel/forest/boruvka"}
+
+
+def test_chrome_trace_schema():
+    tr = Tracer()
+    with tr.span("stage/a", n=4, label="x"):
+        pass
+    tr.add("kernel/round/sfs", 0.0, 1e-3, round=0)
+    doc = tr.chrome_trace()
+    # must be valid JSON end to end
+    doc2 = json.loads(json.dumps(doc))
+    assert doc2["displayTimeUnit"] == "ms"
+    events = doc2["traceEvents"]
+    xs = [ev for ev in events if ev["ph"] == "X"]
+    assert len(xs) == 2
+    for ev in xs:
+        assert set(ev) >= {"name", "ph", "ts", "dur", "pid", "tid", "args"}
+        assert isinstance(ev["ts"], float) and isinstance(ev["dur"], float)
+    assert xs[0]["args"] == {"n": 4, "label": "x"}
+
+
+def test_write_chrome_trace(tmp_path):
+    tr = Tracer()
+    with tr.span("stage/a"):
+        pass
+    path = tmp_path / "trace.json"
+    tr.write_chrome_trace(str(path))
+    with open(path) as f:
+        doc = json.load(f)
+    assert any(ev.get("ph") == "X" for ev in doc["traceEvents"])
+
+
+def test_disabled_tracer_overhead():
+    """The NULL_TRACER hot path must stay within a small constant factor
+    of an empty function call — the instrumented-everywhere budget."""
+    tr = NULL_TRACER
+
+    def probe():
+        with tr.span("stage/x"):
+            pass
+
+    def baseline():
+        pass
+
+    n = 20000
+    t_probe = min(_timeit.repeat(probe, number=n, repeat=3))
+    t_base = min(_timeit.repeat(baseline, number=n, repeat=3))
+    # generous bound: shared singleton span => no allocation, no clock read
+    assert t_probe < max(t_base * 40, 0.05), (
+        f"disabled tracer overhead {t_probe / max(t_base, 1e-12):.1f}x")
+
+
+def test_get_tracer_switches_at_call_time():
+    assert obs.get_tracer() is NULL_TRACER
+    live = obs.enable_tracing()
+    assert obs.get_tracer() is live and live.enabled
+    obs.disable_tracing()
+    assert obs.get_tracer() is NULL_TRACER
+
+
+# ----------------------------------------------------------------- metrics
+def test_counter_and_gauge():
+    m = MetricsRegistry()
+    c = m.counter("x/count")
+    c.inc()
+    c.inc(3)
+    g = m.gauge("x/step_s")
+    before = time.time()
+    g.set(0.25)
+    snap = m.snapshot()
+    assert snap["x/count"] == 4
+    assert snap["x/step_s"]["value"] == 0.25
+    assert before <= snap["x/step_s"]["updated_at"] <= time.time()
+
+
+def test_metric_type_conflict_rejected():
+    m = MetricsRegistry()
+    m.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        m.gauge("x")
+    with pytest.raises(ValueError, match="already registered"):
+        m.histogram("x")
+
+
+def test_histogram_percentiles_vs_numpy():
+    """Bucketed percentiles must match np.quantile within one bucket
+    width over the hit region."""
+    rng = np.random.default_rng(0)
+    samples = rng.uniform(1e-4, 1.0, 5000)
+    h = Histogram("lat", default_latency_buckets())
+    for v in samples:
+        h.observe(float(v))
+    bounds = np.asarray(h.bounds)
+    for q in (0.5, 0.95, 0.99):
+        want = float(np.quantile(samples, q))
+        got = h.percentile(q)
+        i = int(np.searchsorted(bounds, want))
+        lo = bounds[i - 1] if i > 0 else 0.0
+        hi = bounds[i] if i < len(bounds) else float(samples.max())
+        assert abs(got - want) <= (hi - lo) + 1e-12, (
+            f"q={q}: got {got}, want {want}, bucket width {hi - lo}")
+
+
+def test_histogram_exact_at_extremes():
+    h = Histogram("lat")
+    for v in (0.2, 0.4, 0.9):
+        h.observe(v)
+    assert h.percentile(0.0) == pytest.approx(0.2)
+    assert h.percentile(1.0) == pytest.approx(0.9)
+    snap = h.snapshot()
+    assert snap["count"] == 3
+    assert snap["min"] == 0.2 and snap["max"] == 0.9
+    assert snap["mean"] == pytest.approx(0.5)
+
+
+def test_histogram_empty_snapshot():
+    snap = Histogram("lat").snapshot()
+    assert snap["count"] == 0
+    assert snap["p50"] is None and snap["mean"] is None
+
+
+# ------------------------------------------- engine under tracing: contracts
+N, E = 48, 256
+
+
+def _graph(seed):
+    src, dst, _ = gen.planted_bridge_graph(N, E, n_bridges=2, seed=seed)
+    return src, dst
+
+
+def test_enabled_tracer_no_retrace_and_result_parity():
+    """Enabling tracing mid-process must add ZERO retraces on warm
+    analyze / insert_edges / delete_edges and change no results."""
+    eng = BridgeEngine()
+    s0, d0 = _graph(0)
+    s1, d1 = _graph(1)
+    cold = eng.analyze(s0, d0, N, kind="bridges")
+    eng.load(s0, d0, N)
+    eng.insert_edges(s1[:16], d1[:16])
+    eng.delete_edges(s1[:8], d1[:8])
+
+    # second engine pass, same buckets: everything warm
+    traces = eng.stats.traces
+    tr = obs.enable_tracing()
+    warm = eng.analyze(s0, d0, N, kind="bridges")
+    eng.insert_edges(s1[16:32], d1[16:32])
+    eng.delete_edges(s1[16:24], d1[16:24])
+    assert eng.stats.traces == traces, "tracing caused a retrace"
+    assert warm == cold
+    names = {s["name"] for s in tr.spans()}
+    assert {"engine/analyze/bridges", "stage/pipeline/bridges",
+            "engine/insert_edges", "stage/merge/2ec", "stage/append",
+            "engine/delete_edges", "stage/tombstone"} <= names
+
+
+def test_engine_snapshot_one_rollup():
+    eng = BridgeEngine()
+    s0, d0 = _graph(2)
+    eng.analyze(s0, d0, N)
+    snap = eng.snapshot()
+    assert snap["programs"] == len(eng._programs)
+    assert snap["misses"] == eng.stats.misses
+    assert snap["traces"] == eng.stats.traces
+    assert "rebuilds" not in snap  # no live graph yet
+    eng.load(s0, d0, N)
+    eng.delete_edges(s0[:4], d0[:4])
+    snap = eng.snapshot()
+    assert snap["rebuilds_total"] == sum(snap["rebuilds"].values())
+    assert snap["rebuilds"] == eng.live_rebuilds
+    assert snap["live_graph_edges"] == eng.num_live_graph_edges
+
+
+def test_kernel_spans_with_round_subdivision():
+    """Host forest calls emit a measured kernel span whose synthetic
+    per-round children carry the analytic byte model."""
+    from repro.core.forest import spanning_forest_ex
+    from repro.graph.datastructs import EdgeList
+    from repro.kernels.boruvka_round.ops import boruvka_round_bytes, kernel_path
+
+    s, d = _graph(3)
+    el = EdgeList.from_arrays(s, d, N)
+    tr = obs.enable_tracing()
+    _, _, rounds = spanning_forest_ex(el)
+    parents = [x for x in tr.spans() if x["name"] == "kernel/forest/boruvka"]
+    kids = [x for x in tr.spans() if x["name"] == "kernel/round/boruvka"]
+    assert len(parents) == 1
+    assert parents[0]["attrs"]["rounds"] == int(rounds)
+    assert len(kids) == int(rounds)
+    fused = kernel_path(None) != "oracle"
+    want_bytes = boruvka_round_bytes(el.capacity, fused)
+    assert all(k["attrs"]["model_bytes"] == want_bytes for k in kids)
+    assert all(k["parent"] == parents[0]["index"] for k in kids)
+    # subdivision spans the parent's measured duration
+    total_kid = sum(k["dur"] for k in kids)
+    assert total_kid == pytest.approx(parents[0]["dur"], rel=1e-6)
