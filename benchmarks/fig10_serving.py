@@ -1,0 +1,145 @@
+"""Fig 10 (beyond-paper): continuous-batching scheduler vs the sequential
+serving loop under multi-tenant load.
+
+The engine's throughput path is the vmapped ``analyze_batch`` dispatch;
+the original serving loop fed it one query at a time. Fig 10 measures
+what the ``BridgeScheduler`` (DESIGN.md §Serving) buys on the SAME
+tenant-tagged request set, four phases on one engine:
+
+  * sequential    — one ``engine.analyze`` per request, in order: the
+                    pre-scheduler serving loop, reported per query.
+  * scheduler     — every request submitted (maximum pressure), drained
+                    through shape-bucket admission + coalesced vmapped
+                    dispatches; reported per query. The win is batch
+                    occupancy: one dispatch amortizes across tenants.
+  * ragged waves  — submission waves NOT aligned to the pow-2 batch
+                    buckets (5, 3, 1, 7, ...): exercises the batch-pad
+                    path and proves varying occupancy reuses the warmed
+                    programs.
+  * churn turn    — reads + live-graph writes (insert/delete) in one
+                    queue: writes run between read waves under the
+                    certificate-hit rule, reads stay coalesced.
+
+The closing records pin the scheduler counters EXACTLY
+(``scripts/check_bench.py``): ``fig10/occupancy`` (dispatches /
+coalesced / padded slots / occupancy_x100 / writes — deterministic for
+the fixed submission script) and ``fig10/scheduler_cache``
+(programs / misses / traces / warm_retraces=0 — the admission-
+never-retraces contract: after the pow-2 warmup, NO phase may compile
+anything). Baseline: ``BENCH_baseline_fig10.json``.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row
+from repro.engine import BridgeEngine, BridgeScheduler
+from repro.graph import generators as gen
+from repro.obs import MetricsRegistry, get_tracer
+
+#: coalescing window (pow-2): programs per shape bucket <= log2(8)+1
+MAX_BATCH = 8
+
+
+def run(out, smoke: bool = False):
+    v, e = (96, 800) if smoke else (192, 3000)
+    tenants, per_tenant = (4, 6) if smoke else (8, 12)
+    total = tenants * per_tenant
+    n_keys = 16
+
+    def query(seed):
+        with get_tracer().span("host/datagen", seed=seed):
+            n = v - (seed % 7)  # jitter inside the shape bucket
+            src, dst, _ = gen.planted_bridge_graph(n, e, n_bridges=3,
+                                                   seed=seed)
+            return src, dst, n
+
+    with get_tracer().span("host/datagen", what="request set"):
+        requests = [(f"t{i % tenants}", *query(i)) for i in range(total)]
+
+    engine = BridgeEngine()
+    metrics = MetricsRegistry()
+    sched = BridgeScheduler(engine, max_batch=MAX_BATCH, metrics=metrics)
+
+    # ---- warmup: the finite program set both serving paths can touch ----
+    # single-graph program, the pow-2 batched programs up to MAX_BATCH,
+    # and the live-state insert/delete/final programs for the churn turn.
+    _, s0, d0, n0 = requests[0]
+    engine.analyze(s0, d0, n0)
+    b = 1
+    while b <= MAX_BATCH:
+        for _ in range(b):
+            sched.submit("_warm", s0, d0, n0)
+        sched.drain_all()
+        b *= 2
+    engine.load(s0, d0, n0)
+    with get_tracer().span("host/datagen", what="deltas"):
+        deltas = [gen.random_graph(n0, n_keys, seed=1000 + k)
+                  for k in range(8)]
+    engine.insert_edges(*deltas[0])
+    engine.delete_edges(s0[:n_keys], d0[:n_keys])
+    warm_traces = engine.stats.traces
+
+    # ---- sequential loop: one dispatch per request ----------------------
+    t0 = time.perf_counter()
+    for _, s, d, n in requests:
+        engine.analyze(s, d, n)
+    t_seq = (time.perf_counter() - t0) / total
+    out.append(csv_row("fig10/sequential_qps", t_seq,
+                       f"T={tenants} Q={per_tenant}"))
+
+    # ---- scheduler under pressure: every request queued, then drained ---
+    t0 = time.perf_counter()
+    for tenant, s, d, n in requests:
+        sched.submit(tenant, s, d, n)
+    sched.drain_all()
+    t_sched = (time.perf_counter() - t0) / total
+    out.append(csv_row(
+        "fig10/scheduler_qps", t_sched,
+        f"T={tenants} Q={per_tenant} "
+        f"speedup_vs_sequential={t_seq / max(t_sched, 1e-9):.1f}x"))
+
+    # worst-tenant p99 at equal load — the latency side of the headline
+    p99s = {t: metrics.histogram(f"sched/tenant/{t}/latency_s"
+                                 ).percentile(0.99)
+            for t, *_ in requests}
+    worst = max(p99s.values())
+    out.append(csv_row("fig10/scheduler_tenant_p99", worst,
+                       f"T={tenants} best_p99_ms="
+                       f"{min(p99s.values()) * 1e3:.2f}"))
+
+    # ---- ragged waves: occupancy varies, programs must not --------------
+    ragged = iter(requests)
+    for wave in (5, 3, 1, 7):
+        for tenant, s, d, n in (next(ragged) for _ in range(wave)):
+            sched.submit(tenant, s, d, n)
+        sched.drain()
+
+    # ---- churn turn: reads coalesce, writes interleave ------------------
+    for tenant, s, d, n in requests[:tenants]:
+        sched.submit(tenant, s, d, n)
+    for k in range(4):
+        if k % 2 == 0:
+            sched.submit("t0", *deltas[1 + k // 2], op="insert_edges")
+        else:
+            ds, dd = deltas[5 + k // 2]
+            sched.submit("t0", ds[:n_keys], dd[:n_keys], op="delete_edges")
+    sched.drain_all()
+
+    # ---- pinned counters: the whole fixed submission script above -------
+    st = sched.stats
+    out.append(csv_row(
+        "fig10/occupancy", 0.0,
+        f"dispatches={st.dispatches} coalesced={st.coalesced} "
+        f"padded={st.padded_slots} writes={st.writes} "
+        f"occupancy_x100={round(100 * st.occupancy)}"))
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"fig10: {retraces} retrace(s) after warmup — shape-bucket "
+        f"admission failed to guarantee program reuse")
+    info = engine.snapshot()
+    out.append(csv_row(
+        "fig10/scheduler_cache", 0.0,
+        f"programs={info['programs']} misses={info['misses']} "
+        f"traces={info['traces']} warm_retraces={retraces}"))
+    return out

@@ -44,7 +44,8 @@ def rows_to_records(rows: list[str]) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,fig5,fig6,fig7,fig8,fig9")
+                    help="comma list: fig2,fig3,fig4,fig5,fig6,fig7,fig8,"
+                         "fig9,fig10")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes (CI sanity, not for comparison)")
     ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
@@ -59,6 +60,7 @@ def main() -> None:
     which = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
+        fig10_serving,
         fig2_machines,
         fig3_vertices,
         fig4_edges,
@@ -78,6 +80,7 @@ def main() -> None:
         "fig7": fig7_connectivity.run,
         "fig8": fig8_distributed_kinds.run,
         "fig9": fig9_kernels.run,
+        "fig10": fig10_serving.run,
     }
     if which and not which <= set(benches):
         ap.error(f"unknown figure(s) {sorted(which - set(benches))}; "

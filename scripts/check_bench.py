@@ -40,11 +40,18 @@ import sys
 #: kernel's byte-traffic model and measured Borůvka rounds (fig9) + the
 #: span/stage counts of the --trace records (fixed operating sequence +
 #: fixed timeit reps + seed-fixed round counts => a span-count drift means
-#: the instrumentation or the dispatch structure changed)
+#: the instrumentation or the dispatch structure changed) + the
+#: scheduler's coalescing counters (fig10: the submission script is
+#: fixed, so dispatches / coalesced queries / padded slots / writes and
+#: the derived occupancy_x100 are deterministic — a drift means the
+#: shape-bucket admission or the coalescing window changed — and
+#: warm_retraces must stay pinned at 0: admission never retraces)
 EXACT_KEYS = ("programs", "misses", "traces",
               "sfs_rounds", "hybrid_rounds", "chain_rounds",
               "boruvka_rounds", "bytes_fused", "bytes_lax",
-              "spans", "stages")
+              "spans", "stages",
+              "dispatches", "coalesced", "padded", "writes",
+              "occupancy_x100", "warm_retraces")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

@@ -2,8 +2,9 @@
 # CI entry point (CPU): tier-1 tests + the kernel interpret-mode suite +
 # quickstart example + the perf-path smoke benchmark suite (fig5 baseline
 # crossover, fig6 engine, fig7 connectivity, fig8 distributed kinds, fig9
-# fused-kernel byte/round records — each asserts its own no-retrace/
-# sanity/parity invariants) + the bench-regression gate
+# fused-kernel byte/round records, fig10 multi-tenant serving scheduler —
+# each asserts its own no-retrace/sanity/parity invariants) + the
+# bench-regression gate
 # (scripts/check_bench.py vs the committed BENCH_baseline.json: cache,
 # round and byte counters exact, timings within a generous tolerance), so
 # a perf-path regression fails the build. Usable locally (no installs
@@ -23,6 +24,9 @@ python -m pytest tests/test_kernels.py -x -q
 echo "== observability suite (spans, histograms, no-retrace under tracing) =="
 python -m pytest tests/test_obs.py -x -q
 
+echo "== scheduler suite (coalescing parity, no-retrace admission, churn) =="
+python -m pytest tests/test_scheduler.py -x -q
+
 echo "== examples/quickstart.py =="
 python examples/quickstart.py
 
@@ -35,6 +39,9 @@ python -m benchmarks.run --only fig8 --smoke --json BENCH_fig8_distributed_kinds
 echo "== fig9: fused-kernel records artifact =="
 python -m benchmarks.run --only fig9 --smoke --json BENCH_fig9_kernels.json
 
+echo "== fig10: multi-tenant serving (scheduler vs sequential loop) =="
+python -m benchmarks.run --only fig10 --smoke --json BENCH_fig10_serving.json
+
 echo "== fig6 under the span tracer: stage rollup + span-count gate =="
 python -m benchmarks.run --only fig6 --smoke --trace \
     --json BENCH_ci_trace.json --trace-json BENCH_ci_trace_rollup.json
@@ -46,5 +53,7 @@ python scripts/check_bench.py --baseline BENCH_baseline_fig8.json \
     --current BENCH_fig8_distributed_kinds.json
 python scripts/check_bench.py --baseline BENCH_baseline_trace.json \
     --current BENCH_ci_trace.json
+python scripts/check_bench.py --baseline BENCH_baseline_fig10.json \
+    --current BENCH_fig10_serving.json
 
 echo "CI OK"

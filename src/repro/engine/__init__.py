@@ -15,11 +15,16 @@ from repro.engine.engine import (
     find_bridges_batch,
     get_default_engine,
 )
+from repro.engine.scheduler import BridgeScheduler, Ticket
+from repro.engine.state import SchedStats
 
 __all__ = [
     "ANALYSIS_KINDS",
     "BridgeEngine",
+    "BridgeScheduler",
     "EngineStats",
+    "SchedStats",
+    "Ticket",
     "BatchedEdgeList",
     "make_analysis_fn",
     "make_batched_pipeline",

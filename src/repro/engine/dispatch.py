@@ -24,10 +24,23 @@ from repro.core.certs import get_certificate
 from repro.engine.batched import make_analysis_fn, make_batched_pipeline
 from repro.graph.datastructs import (
     EdgeList,
+    bucket_capacity,
     compact_edges,
     concat_edges,
     tombstone_mask,
 )
+
+
+def admission_bucket(n_nodes: int, n_edges: int,
+                     min_bucket: int = 16) -> tuple[int, int]:
+    """The pow-2 ``(n_bucket, capacity_bucket)`` shape bucket a request
+    is admitted under — exactly the bucket components of every
+    ``ProgramCache`` key, which makes the bucket the scheduler's
+    admission currency: two requests with equal admission buckets are
+    guaranteed to share one compiled program, so coalescing them can
+    never retrace (``engine/scheduler.py``; DESIGN.md §Serving)."""
+    return (bucket_capacity(int(n_nodes), min_bucket),
+            bucket_capacity(max(int(n_edges), 1), min_bucket))
 
 
 class ProgramCache:

@@ -126,6 +126,7 @@ class BridgeEngine:
         self.stats = EngineStats()
         self._cache = ProgramCache(self.stats)
         self._live: LiveState | None = None
+        self._scheduler = None  # lazy BridgeScheduler (see .scheduler)
 
     @property
     def _programs(self) -> dict:
@@ -197,7 +198,39 @@ class BridgeEngine:
             snap["rebuilds"] = rebuilds
             snap["rebuilds_total"] = sum(rebuilds.values())
             snap["live_graph_edges"] = self._live.count
+        if self._scheduler is not None:
+            snap["scheduler"] = self._scheduler.snapshot()
         return snap
+
+    # -------------------------------------------------------------- scheduler
+    @property
+    def scheduler(self):
+        """The engine's continuous-batching request path, created on first
+        use (``engine/scheduler.py``; DESIGN.md §Serving). For a custom
+        coalescing window or an isolated metrics registry, construct
+        ``BridgeScheduler(engine, ...)`` directly and drive it instead."""
+        if self._scheduler is None:
+            from repro.engine.scheduler import BridgeScheduler
+
+            self._scheduler = BridgeScheduler(self)
+        return self._scheduler
+
+    def submit(self, tenant: str, src, dst, n_nodes: int | None = None,
+               *, op: str = "analyze", kind: str = "bridges",
+               final: str = "device", certificate: str | None = None):
+        """Queue a tenant-tagged request on the engine's scheduler; the
+        returned ``Ticket`` resolves on a later ``drain``."""
+        return self.scheduler.submit(tenant, src, dst, n_nodes, op=op,
+                                     kind=kind, final=final,
+                                     certificate=certificate)
+
+    def drain(self) -> int:
+        """One scheduler step: a coalesced read wave + the write turn."""
+        return self.scheduler.drain()
+
+    def drain_all(self) -> int:
+        """Drain the scheduler queue to empty."""
+        return self.scheduler.drain_all()
 
     def _bucket(self, m: int) -> int:
         return bucket_capacity(m, self.min_bucket)

@@ -45,6 +45,47 @@ class EngineStats:
 
 
 @dataclasses.dataclass
+class SchedStats:
+    """Continuous-batching scheduler counters (``engine/scheduler.py``).
+
+    ``coalesced`` counts real queries served through coalesced vmapped
+    dispatches, ``dispatches`` the device dispatches that served them —
+    their ratio is the batch occupancy (queries amortized per dispatch,
+    the number that explains the scheduler's throughput win), and
+    ``padded_slots`` the masked-off batch rows the pow-2 batch bucket
+    added. All are deterministic for a fixed submission sequence, so
+    fig10 pins them exactly (``scripts/check_bench.py``).
+    """
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    drains: int = 0
+    dispatches: int = 0
+    coalesced: int = 0
+    padded_slots: int = 0
+    writes: int = 0
+
+    @property
+    def occupancy(self) -> float | None:
+        """Mean real queries per coalesced dispatch (> 1 == amortizing)."""
+        return self.coalesced / self.dispatches if self.dispatches else None
+
+    def snapshot(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "drains": self.drains,
+            "dispatches": self.dispatches,
+            "coalesced": self.coalesced,
+            "padded_slots": self.padded_slots,
+            "writes": self.writes,
+            "occupancy": self.occupancy,
+        }
+
+
+@dataclasses.dataclass
 class LiveState:
     """The engine's live graph (``load``/``insert_edges``/``delete_edges``).
 

@@ -34,6 +34,22 @@ serving story end to end; the report then also carries the deletion count
 and per-certificate rebuild counters (most deletions never touch a
 certificate and are free, DESIGN.md §Decremental).
 
+``--workload multitenant --tenants N`` is the continuous-batching request
+path (DESIGN.md §Serving): N tenants' requests arrive on an open-loop
+process (``--arrival-qps``; 0 = all at once, maximum pressure) and the
+SAME arrival schedule is served twice — first by the sequential
+one-query-at-a-time loop, then through the engine's ``BridgeScheduler``
+(shape-bucket admission, coalesced vmapped dispatch, write churn
+interleaved between read waves). The report compares aggregate qps and
+per-tenant arrival-to-completion p50/p95/p99 at equal offered load,
+carries the scheduler rollup (batch occupancy, dispatches, padded slots)
+that explains the win, a fairness section (Jain index over per-tenant
+throughput + p99 spread), and asserts ZERO retraces after warmup — the
+admission bucket is the ``ProgramCache`` currency, so coalescing never
+recompiles. With ``--deltas > 0`` the last tenant is churn-heavy
+(inserts + link failures against the shared live graph) while the rest
+are read-heavy.
+
 ``--certificate {2ec,sfs,hybrid,auto}`` picks the certificate preference:
 each kind is served from the requested type wherever it preserves what the
 kind needs (e.g. ``hybrid`` serves cuts/bcc; bridges falls back to its
@@ -57,8 +73,9 @@ import numpy as np
 from repro import obs
 from repro.connectivity.registry import analysis_kinds, get_analysis
 from repro.core.certs import certificate_names
-from repro.engine import BridgeEngine
+from repro.engine import BridgeEngine, BridgeScheduler
 from repro.graph import generators as gen
+from repro.graph.datastructs import bucket_capacity
 from repro.kernels.boruvka_round import kernel_path
 from repro.obs import MetricsRegistry, profiler_trace
 
@@ -67,6 +84,29 @@ KINDS = tuple(k.replace("_", "-") for k in analysis_kinds())
 
 #: certificate choices: every registered type plus 'auto' (kind defaults)
 CERTS = tuple(certificate_names()) + ("auto",)
+
+#: the per-kind serving phases each latency histogram family covers
+PHASES = ("batched", "single", "update")
+
+
+def phase_histograms(metrics: MetricsRegistry, prefix: str,
+                     phases=PHASES) -> dict:
+    """One latency histogram per serving phase under ``prefix`` —
+    get-or-create through the registry, so the recording path and every
+    report path share the same objects instead of re-walking
+    ``metrics.histogram(...)`` name construction independently."""
+    return {phase: metrics.histogram(f"{prefix}/{phase}_s")
+            for phase in phases}
+
+
+def latency_rollup(metrics: MetricsRegistry, prefix: str,
+                   phases=PHASES) -> dict:
+    """{phase: percentile snapshot} for the non-empty phases of one
+    histogram family — THE shared latency-aggregation helper behind the
+    per-kind, per-certificate, and per-tenant report sections."""
+    return {phase: h.snapshot()
+            for phase, h in phase_histograms(metrics, prefix, phases).items()
+            if h.count}
 
 
 def substrates(kind: str, engine: BridgeEngine | None = None) -> dict:
@@ -138,10 +178,8 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args,
     stats: dict = {"kind": kind, "substrates": substrates(kind, engine),
                    "certificate": cert,
                    "kernel_path": kernel_path()}
-    hists = {phase: metrics.histogram(f"serve/{kind}/{phase}_s")
-             for phase in ("batched", "single", "update")}
-    cert_hists = {phase: metrics.histogram(f"serve/cert/{cert}/{phase}_s")
-                  for phase in ("batched", "single", "update")}
+    hists = phase_histograms(metrics, f"serve/{kind}")
+    cert_hists = phase_histograms(metrics, f"serve/cert/{cert}")
 
     def timed(phase, fn, *a, **kw):
         t0 = time.perf_counter()
@@ -246,8 +284,7 @@ def serve_kind(engine: BridgeEngine, kind: str, queries, args,
                                 "cert_rebuilds": rebuilds,
                                 "updates_per_s": ups,
                                 "live_cert_edges": engine.num_live_edges}
-    stats["latency"] = {phase: h.snapshot() for phase, h in hists.items()
-                        if h.count}
+    stats["latency"] = latency_rollup(metrics, f"serve/{kind}")
     print(f"[{kind:11s}] latency  : " + " | ".join(
         f"{phase} {_pctl_str(snap)}"
         for phase, snap in stats["latency"].items()), flush=True)
@@ -290,11 +327,260 @@ def certificate_report(per_kind: list, metrics: MetricsRegistry | None = None,
         # kind that rode the certificate (true cross-kind percentiles —
         # NOT derivable from the per-kind snapshots)
         for cert, agg in by_cert.items():
-            lat = {phase: metrics.histogram(f"serve/cert/{cert}/{phase}_s")
-                   for phase in ("batched", "single", "update")}
-            agg["latency"] = {phase: h.snapshot() for phase, h in lat.items()
-                              if h.count}
+            agg["latency"] = latency_rollup(metrics, f"serve/cert/{cert}")
     return by_cert
+
+
+def jain_index(xs) -> float | None:
+    """Jain's fairness index over per-tenant rates: 1.0 = perfectly even,
+    1/N = one tenant got everything."""
+    xs = [x for x in xs if x]
+    if not xs:
+        return None
+    s, s2 = sum(xs), sum(x * x for x in xs)
+    return (s * s) / (len(xs) * s2) if s2 else None
+
+
+def _mt_events(args, kinds, reads, rng):
+    """The multi-tenant request schedule: per-tenant streams interleaved
+    round-robin, with open-loop arrival offsets (exponential interarrivals
+    at ``--arrival-qps``; all-at-zero when 0 = maximum pressure). The last
+    tenant is churn-heavy (write ops against the shared live graph) when
+    ``--deltas > 0`` and at least two tenants exist."""
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+    churn = tenants[-1] if (args.deltas > 0 and args.tenants > 1) else None
+    readers = [t for t in tenants if t != churn]
+    streams = {t: [] for t in tenants}
+    for i, (s, d, nq) in enumerate(reads):
+        streams[readers[i % len(readers)]].append(
+            {"op": "analyze", "kind": get_analysis(kinds[i % len(kinds)]).kind,
+             "graph": (s, d, nq)})
+    if churn is not None:
+        streams[churn] = [{"op": None}] * args.deltas  # ops filled per phase
+    events = []
+    live = [t for t in tenants if streams[t]]
+    while live:
+        for t in live:
+            events.append({"tenant": t, **streams[t].pop(0)})
+        live = [t for t in tenants if streams[t]]
+    if args.arrival_qps > 0:
+        gaps = rng.exponential(1.0 / args.arrival_qps, size=len(events))
+        arrivals = np.cumsum(gaps)
+    else:
+        arrivals = np.zeros(len(events))
+    for ev, t_arr in zip(events, arrivals):
+        ev["t"] = float(t_arr)
+    return tenants, churn, events
+
+
+def _mt_writes(count: int, n0: int, delta_edges: int, base, seed: int):
+    """A churn-heavy tenant's write stream for one phase: inserts of fresh
+    random deltas, link failures sampled from the base edge set (so some
+    hit certificate edges and exercise the rebuild rule), at roughly the
+    configured delete ratio via the seeded rng."""
+    rng = np.random.default_rng(seed)
+    s0, d0 = base
+    ops = []
+    for k in range(count):
+        if rng.random() < 0.5 and len(s0) > delta_edges:
+            idx = rng.choice(len(s0), delta_edges, replace=False)
+            ops.append(("delete_edges", s0[idx], d0[idx]))
+        else:
+            ds, dd = gen.random_graph(n0, delta_edges, seed=seed + 100 + k)
+            ops.append(("insert_edges", ds, dd))
+    return ops
+
+
+def serve_multitenant(engine: BridgeEngine, kinds, args,
+                      metrics: MetricsRegistry) -> dict:
+    """The continuous-batching request path vs the sequential loop, at the
+    same open-loop arrival schedule (DESIGN.md §Serving).
+
+    Phase order: warmup (compiles every program either phase can touch —
+    the single-graph program per kind, the batched program per pow-2
+    batch bucket up to ``--batch``, and one insert + one delete), then
+    the SEQUENTIAL phase (one ``engine.analyze`` per request, in arrival
+    order), then the SCHEDULER phase (same schedule submitted into a
+    ``BridgeScheduler`` and drained). Latency is arrival-to-completion
+    for both, so queueing is charged identically; after warmup the
+    engine's ``traces`` counter must not move — shape-bucket admission
+    means coalescing never retraces.
+    """
+    kinds = [get_analysis(k).kind for k in kinds]
+    rng = np.random.default_rng(args.seed + 71)
+    n_readers = max(args.tenants - (1 if args.deltas > 0 else 0), 1)
+    reads = make_queries(args.queries * n_readers, args.n, args.edges,
+                         seed=args.seed)
+    tenants, churn, events = _mt_events(args, kinds, reads, rng)
+
+    # live graph for the churn tenant + write sizing that never outgrows
+    # the full-buffer bucket (bucket growth would be a mid-phase retrace)
+    s0, d0, n0 = reads[0]
+    engine.load(s0, d0, n0)
+    n_writes = args.deltas if churn is not None else 0
+    headroom = bucket_capacity(len(s0)) - len(s0)
+    delta_edges = max(1, min(args.delta_edges,
+                             headroom // max(2 * n_writes + 2, 1)))
+    write_streams = {
+        "seq": _mt_writes(n_writes, n0, delta_edges, (s0, d0),
+                          args.seed + 211),
+        "sched": _mt_writes(n_writes, n0, delta_edges, (s0, d0),
+                            args.seed + 409),
+    }
+
+    # ---- warmup: compile everything both phases can touch ----------------
+    warm = BridgeScheduler(engine, max_batch=args.batch,
+                           metrics=MetricsRegistry())
+    ws, wd, wn = reads[0]
+    for kind in set(kinds):
+        engine.analyze(ws, wd, wn, kind=kind)
+        b = 1
+        while b <= args.batch:
+            for _ in range(b):
+                warm.submit("_warm", ws, wd, wn, kind=kind)
+            warm.drain_all()
+            b *= 2
+    if churn is not None:
+        engine.insert_edges(*gen.random_graph(n0, delta_edges,
+                                              seed=args.seed + 7))
+        engine.delete_edges(s0[:delta_edges], d0[:delta_edges])
+    warm_traces = engine.stats.traces
+
+    def percentiles(prefix):
+        return latency_rollup(metrics, prefix, phases=("latency",)
+                              ).get("latency")
+
+    def run_phase(name, serve_fn):
+        """Replay ``events`` against ``serve_fn`` under open-loop pacing;
+        returns the phase rollup with per-tenant arrival-based latency."""
+        writes = iter(write_streams[name])
+        start = time.perf_counter()
+        serve_fn(start, writes)
+        wall = time.perf_counter() - start
+        per_tenant = {}
+        for t in tenants:
+            served = sum(1 for ev in events if ev["tenant"] == t)
+            per_tenant[t] = {
+                "requests": served,
+                "qps": served / max(wall, 1e-9),
+                "latency": percentiles(f"mt/{name}/tenant/{t}"),
+            }
+        agg = percentiles(f"mt/{name}/all")
+        return {"wall_s": wall, "qps": len(events) / max(wall, 1e-9),
+                "latency": agg, "per_tenant": per_tenant}
+
+    def observe(name, tenant, lat):
+        metrics.histogram(f"mt/{name}/tenant/{tenant}/latency_s").observe(lat)
+        metrics.histogram(f"mt/{name}/all/latency_s").observe(lat)
+
+    def serve_sequential(start, writes):
+        for ev in events:
+            rel = time.perf_counter() - start
+            if ev["t"] > rel:
+                time.sleep(ev["t"] - rel)
+            if ev["op"] == "analyze":
+                s, d, nq = ev["graph"]
+                got = engine.analyze(s, d, nq, kind=ev["kind"])
+                if args.verify and ev is events[0]:
+                    want = get_analysis(ev["kind"]).host_fn(s, d, nq)
+                    assert _same(ev["kind"], got, want), "mt seq mismatch"
+            else:
+                op, ks, kd = next(writes)
+                getattr(engine, op)(ks, kd)
+            observe("seq", ev["tenant"],
+                    time.perf_counter() - start - ev["t"])
+
+    def serve_scheduler(start, writes):
+        sched = BridgeScheduler(engine, max_batch=args.batch,
+                                metrics=metrics)
+        arrivals: list = []  # (ticket, event) in completion-check order
+        i = 0
+        while i < len(events) or sched.pending:
+            rel = time.perf_counter() - start
+            while i < len(events) and events[i]["t"] <= rel:
+                ev = events[i]
+                if ev["op"] == "analyze":
+                    s, d, nq = ev["graph"]
+                    tk = sched.submit(ev["tenant"], s, d, nq,
+                                      kind=ev["kind"])
+                else:
+                    op, ks, kd = next(writes)
+                    tk = sched.submit(ev["tenant"], ks, kd, op=op)
+                arrivals.append((tk, ev))
+                i += 1
+            if sched.pending == 0:
+                if i < len(events):
+                    time.sleep(max(events[i]["t"] - rel, 0.0))
+                continue
+            sched.drain()
+        for tk, ev in arrivals:
+            observe("sched", ev["tenant"], tk.t_done - start - ev["t"])
+            if args.verify and ev is events[0] and ev["op"] == "analyze":
+                s, d, nq = ev["graph"]
+                want = get_analysis(ev["kind"]).host_fn(s, d, nq)
+                assert _same(ev["kind"], tk.result(), want), "mt sched mismatch"
+        serve_scheduler.sched = sched
+
+    seq = run_phase("seq", serve_sequential)
+    sched_phase = run_phase("sched", serve_scheduler)
+    sched = serve_scheduler.sched
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"{retraces} retrace(s) during warm multi-tenant serving — "
+        f"admission bucketing failed to guarantee program reuse")
+    sched_snap = sched.snapshot()
+    report = {
+        "tenants": args.tenants,
+        "churn_tenant": churn,
+        "requests": len(events),
+        "arrival_qps": args.arrival_qps,
+        "delta_edges": delta_edges,
+        "sequential": seq,
+        "scheduler": sched_phase,
+        "scheduler_rollup": sched_snap,
+        "warm_retraces": retraces,
+        "speedup": seq["wall_s"] / max(sched_phase["wall_s"], 1e-9),
+        "fairness": {
+            "jain_qps": jain_index(
+                [row["qps"] for row in sched_phase["per_tenant"].values()]),
+            "p99_spread": _p99_spread(sched_phase["per_tenant"]),
+        },
+    }
+    occ = sched_snap["occupancy"] or 0.0
+    print(f"[multitenant] {args.tenants} tenants x open-loop "
+          f"({'pressure' if not args.arrival_qps else f'{args.arrival_qps:.0f} qps'})"
+          f" | {len(events)} requests", flush=True)
+    for name, phase in (("sequential", seq), ("scheduler", sched_phase)):
+        lat = phase["latency"] or {}
+        print(f"[multitenant] {name:10s}: {phase['qps']:.1f} qps | "
+              + (_pctl_str(lat) if lat else "no latency samples"),
+              flush=True)
+    print(f"[multitenant] speedup {report['speedup']:.2f}x | occupancy "
+          f"{occ:.2f} queries/dispatch ({sched_snap['dispatches']} "
+          f"dispatches, {sched_snap['padded_slots']} padded slots, "
+          f"{sched_snap['writes']} writes) | warm retraces {retraces}",
+          flush=True)
+    for t in tenants:
+        row = sched_phase["per_tenant"][t]
+        lat = row["latency"] or {}
+        role = "churn" if t == churn else "read"
+        print(f"[multitenant]   {t:9s} ({role:5s}): {row['qps']:.1f} qps | "
+              + (_pctl_str(lat) if lat else "-"), flush=True)
+    fair = report["fairness"]
+    jain = fair["jain_qps"]
+    spread = fair["p99_spread"]
+    print(f"[multitenant] fairness: "
+          f"jain={'n/a' if jain is None else f'{jain:.3f}'} "
+          f"p99_spread={'n/a' if spread is None else f'{spread:.2f}x'}",
+          flush=True)
+    return report
+
+
+def _p99_spread(per_tenant: dict) -> float | None:
+    """max/min ratio of per-tenant p99 latency (1.0 = perfectly even)."""
+    p99s = [row["latency"]["p99"] for row in per_tenant.values()
+            if row["latency"] and row["latency"].get("p99")]
+    return max(p99s) / min(p99s) if p99s else None
 
 
 def main(argv=None):
@@ -309,13 +595,23 @@ def main(argv=None):
     ap.add_argument("--deltas", type=int, default=16,
                     help="incremental updates served after the batched phase")
     ap.add_argument("--delta-edges", type=int, default=64)
-    ap.add_argument("--workload", choices=["insert", "churn"],
+    ap.add_argument("--workload", choices=["insert", "churn", "multitenant"],
                     default="insert",
-                    help="incremental phase: insert-only, or churn with "
-                         "interleaved link failures (delete_edges)")
+                    help="incremental phase: insert-only, churn with "
+                         "interleaved link failures (delete_edges), or the "
+                         "multitenant continuous-batching request path "
+                         "(scheduler vs sequential loop)")
     ap.add_argument("--delete-ratio", type=float, default=0.25,
                     help="churn workload: fraction of deltas that are "
                          "deletions")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="multitenant workload: number of tenants (each "
+                         "reader issues --queries requests; the last tenant "
+                         "is churn-heavy when --deltas > 0)")
+    ap.add_argument("--arrival-qps", type=float, default=0.0,
+                    help="multitenant workload: aggregate open-loop arrival "
+                         "rate (exponential interarrivals; 0 = all requests "
+                         "arrive at t=0, maximum pressure)")
     ap.add_argument("--certificate", choices=list(CERTS), default="auto",
                     help="serve every kind from this certificate where the "
                          "kind can ride it (falls back to the kind's "
@@ -336,6 +632,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.batch < 1 or args.queries < 1:
         ap.error("--batch and --queries must be >= 1")
+    if args.tenants < 1:
+        ap.error("--tenants must be >= 1")
     kinds = args.analysis or ["bridges"]
     if "all" in kinds:
         kinds = list(KINDS)
@@ -344,15 +642,23 @@ def main(argv=None):
         args.n = min(args.n, 128)
         args.edges = min(args.edges, 1024)
         args.deltas = min(args.deltas, 4)
+        if args.workload == "multitenant":
+            args.queries = min(args.queries, 6)
 
     engine = BridgeEngine(certificate=args.certificate)
     metrics = MetricsRegistry()
     tracer = obs.enable_tracing() if args.trace_out else None
-    queries = make_queries(args.queries, args.n, args.edges, seed=args.seed)
+    multitenant = None
+    per_kind: list = []
     try:
         with profiler_trace(args.profile_dir):
-            per_kind = [serve_kind(engine, kind, queries, args, metrics)
-                        for kind in kinds]
+            if args.workload == "multitenant":
+                multitenant = serve_multitenant(engine, kinds, args, metrics)
+            else:
+                queries = make_queries(args.queries, args.n, args.edges,
+                                       seed=args.seed)
+                per_kind = [serve_kind(engine, kind, queries, args, metrics)
+                            for kind in kinds]
     finally:
         if tracer is not None:
             obs.disable_tracing()
@@ -382,7 +688,11 @@ def main(argv=None):
               "metrics": metrics.snapshot(),
               "config": {"batch": args.batch, "queries": args.queries,
                          "n": args.n, "edges": args.edges,
-                         "certificate": args.certificate}}
+                         "certificate": args.certificate,
+                         "workload": args.workload,
+                         "tenants": args.tenants}}
+    if multitenant is not None:
+        report["multitenant"] = multitenant
     if tracer is not None:
         tracer.write_chrome_trace(args.trace_out)
         stages = tracer.stage_rollup()

@@ -1,0 +1,153 @@
+"""BridgeScheduler: shape-bucket admission, ragged coalescing, write
+interleave, and the never-retrace contract (DESIGN.md §Serving)."""
+import numpy as np
+import pytest
+
+from repro.core.bridges_host import bridges_dfs
+from repro.engine import BatchedEdgeList, BridgeEngine, BridgeScheduler
+from repro.graph import generators as gen
+from repro.obs import MetricsRegistry, get_metrics
+
+# Same operating point as test_engine.py: n in (32, 64] -> bucket 64,
+# E -> bucket 512, so the module shares a few compiled programs.
+N_A, N_B, E_N = 50, 60, 400
+
+
+def graph(seed, n=N_A, e=E_N):
+    src, dst, _ = gen.planted_bridge_graph(n, e, n_bridges=3, seed=seed)
+    return src, dst
+
+
+def make_sched(**kw):
+    kw.setdefault("metrics", MetricsRegistry())
+    return BridgeScheduler(BridgeEngine(), **kw)
+
+
+def test_ragged_coalescing_matches_per_graph_analyze():
+    """Mixed live-edge counts AND mixed n in ONE admission bucket: one
+    coalesced dispatch answers exactly what per-graph analyze would."""
+    sched = make_sched(max_batch=8)
+    cases = [(*graph(s, n=N_A if s % 2 else N_B, e=260 + 6 * s),
+              N_A if s % 2 else N_B) for s in range(7)]
+    tickets = [sched.submit(f"t{i % 3}", s, d, n)
+               for i, (s, d, n) in enumerate(cases)]
+    assert sched.pending == 7
+    assert len({t.bucket for t in tickets}) == 1  # one admission bucket
+    assert sched.drain_all() == 7
+    for t, (s, d, n) in zip(tickets, cases):
+        assert t.result() == bridges_dfs(s, d, n)
+        assert t.latency_s > 0
+    st = sched.stats
+    assert (st.dispatches, st.coalesced) == (1, 7)
+    assert st.padded_slots == 1  # 7 queries padded to the 8-slot bucket
+
+
+def test_batch_pad_never_drops_real_edges():
+    """The coalescing pad is growth-only: a graph bigger than the batch
+    capacity is an admission error, not a silent truncation."""
+    s, d = graph(0)
+    with pytest.raises(ValueError, match="exceeds batch capacity"):
+        BatchedEdgeList.from_graphs([(s, d)], N_A, capacity=len(s) // 2)
+
+
+def test_no_retrace_across_varying_occupancy():
+    """Admission currency: after warming the pow-2 batch buckets, drains
+    of ANY occupancy (3, 5, 8, 1, mixed tenants) reuse the compiled
+    programs — zero retraces, bounded program count."""
+    sched = make_sched(max_batch=8)
+    eng = sched.engine
+    b = 1
+    while b <= 8:  # warm batch buckets 1, 2, 4, 8
+        for _ in range(b):
+            sched.submit("warm", *graph(0), N_A)
+        sched.drain_all()
+        b *= 2
+    warm = (eng.stats.traces, eng.stats.misses)
+    for wave in (3, 5, 8, 1):
+        for i in range(wave):
+            sched.submit(f"t{i}", *graph(10 + i), N_A)
+        assert sched.drain() == wave
+    assert (eng.stats.traces, eng.stats.misses) == warm
+    # 4 batched variants (pow-2 pad): log2(max_batch) + 1 per shape bucket
+    assert eng.cache_info()["programs"] == 4
+
+
+def test_writes_interleave_with_reads():
+    """One queue, both ops: reads coalesce, queued churn lands between
+    read waves in submission order, and the live answer matches a
+    host recompute of the same edge history."""
+    sched = make_sched(max_batch=4)
+    eng = sched.engine
+    src, dst = graph(1)
+    eng.load(src, dst, N_A)
+    ins, ind = gen.random_graph(N_A, 16, seed=7)
+    t_read = sched.submit("reader", *graph(2), N_A)
+    t_ins = sched.submit("churner", ins, ind, op="insert_edges")
+    t_del = sched.submit("churner", src[:8], dst[:8], op="delete_edges")
+    assert sched.drain() == 3  # one wave serves the read AND both writes
+    assert t_read.result() == bridges_dfs(*graph(2), N_A)
+    t_ins.result(), t_del.result()  # writes resolved, no error captured
+    keys = {(min(a, b), max(a, b)) for a, b in zip(src[:8], dst[:8])}
+    ss, dd = np.concatenate([src, ins]), np.concatenate([dst, ind])
+    keep = [(min(a, b), max(a, b)) not in keys for a, b in zip(ss, dd)]
+    assert eng.current_bridges() == bridges_dfs(ss[keep], dd[keep], N_A)
+    assert sched.stats.writes == 2
+
+
+def test_engine_surface_and_snapshot_rollup():
+    """engine.submit/drain delegate to a lazily-built scheduler whose
+    rollup rides engine.snapshot()."""
+    eng = BridgeEngine()
+    t = eng.submit("a", *graph(3), N_A)
+    assert eng.drain_all() == 1
+    assert t.result() == bridges_dfs(*graph(3), N_A)
+    snap = eng.snapshot()["scheduler"]
+    assert snap["completed"] == 1 and snap["pending"] == 0
+    assert snap["tenants"]["a"]["completed"] == 1
+
+
+def test_metrics_and_watchdog_heartbeat():
+    """Queue-depth gauge tracks admission, occupancy lands after a drain,
+    per-tenant histograms count completions, and every non-empty drain
+    heartbeats sched/step_s into the global registry (satellite: the
+    watchdog IS the drain-loop liveness signal)."""
+    beat = get_metrics().gauge("sched/step_s")
+    before = beat.updated_at
+    m = MetricsRegistry()
+    sched = make_sched(max_batch=8, metrics=m)
+    for i in range(3):
+        sched.submit("t0" if i else "t1", *graph(i), N_A)
+    assert m.gauge("sched/queue_depth").value == 3
+    assert sched.drain_all() == 3
+    assert m.gauge("sched/queue_depth").value == 0
+    assert m.gauge("sched/batch_occupancy").value == 3 / 4  # 3 of 4 slots
+    assert m.histogram("sched/tenant/t0/latency_s").count == 2
+    assert m.counter("sched/tenant/t1/completed").snapshot() == 1
+    assert beat.updated_at is not None and beat.updated_at != before
+    stamped = beat.updated_at
+    assert sched.drain() == 0  # empty drain: no dispatch, no heartbeat
+    assert beat.updated_at == stamped
+
+
+def test_ticket_errors_are_isolated():
+    """A failing request fails ONLY its own ticket: the error surfaces at
+    result(), other requests in the same drain still complete."""
+    sched = make_sched()
+    bad = sched.submit("w", *gen.random_graph(N_A, 8, seed=0),
+                       op="insert_edges")  # no live graph loaded
+    ok = sched.submit("r", *graph(4), N_A)
+    with pytest.raises(RuntimeError, match="still"):
+        bad.result()  # not drained yet
+    sched.drain_all()
+    assert ok.result() == bridges_dfs(*graph(4), N_A)
+    with pytest.raises(Exception, match="load"):
+        bad.result()
+    assert sched.stats.failed == 1 and sched.stats.completed == 2
+
+
+def test_submit_validates_ops():
+    sched = make_sched()
+    with pytest.raises(ValueError, match="unknown op"):
+        sched.submit("t", *graph(0), N_A, op="compact")
+    with pytest.raises(ValueError, match="n_nodes"):
+        sched.submit("t", *graph(0))
