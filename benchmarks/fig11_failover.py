@@ -1,0 +1,129 @@
+"""Fig 11 (beyond-paper): fault-tolerant serving — recovery latency and
+re-merge phase count vs the clean serve (DESIGN.md §Fault tolerance).
+
+Four drills, all seed-fixed so every failure counter is deterministic and
+``scripts/check_bench.py`` pins them EXACTLY against
+``BENCH_baseline_fig11.json``:
+
+  * clean merge       — the failover path with NO kill: must execute the
+                        plain schedule (``restarts=0``), timed as the
+                        baseline the recovery drills compare against.
+  * checkpoint drill  — a block owner dies at phase boundary 1 with a
+                        per-boundary snapshot cadence: recovery restores
+                        the dead machine's coverage-labelled certificate
+                        from its snapshot (``ckpt_used=1``) and re-merges
+                        the coverage representatives under the degraded
+                        plan (``remerge_phases`` pinned).
+  * recertify drill   — same kill, checkpoints disabled: the designated
+                        survivor re-certifies the dead shard instead —
+                        the upper bound a snapshot saves.
+  * engine restore    — ``CheckpointPolicy`` round-trip of the live
+                        serving state: every-K-writes snapshots, then
+                        ``restore_live`` with the trace counter frozen —
+                        ``warm_retraces=0`` pinned: restore runs NO
+                        program, the warm cache serves immediately.
+
+The serving-level watchdog drill (kill → heartbeat detection → recovery →
+parity, ``serve_bridges --workload failover``) runs in
+``tests/test_failover.py``; fig11 keeps to the merge/engine layers so its
+records stay timing-stable.
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import csv_row, timeit
+from repro.core.merge import simulate_failover_host
+from repro.core.partition import partition_edges
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+from repro.obs import get_metrics
+from repro.runtime.failures import FailureInjector
+
+#: the drilled kill: machine 0 (a paper-schedule block owner — its loss at
+#: boundary 1 is NOT absorbed by any survivor, so the recovery source
+#: distinguishes the checkpoint and recertify paths) at phase boundary 1
+VICTIM, BOUNDARY = 0, 1
+
+
+def _shards(n: int, e: int, m: int):
+    src, dst, _ = gen.planted_bridge_graph(n, e, 3, seed=7)
+    ps, pd, pm = partition_edges(src, dst, n, m, seed=1)
+    cap = ps.shape[1]
+    return [EdgeList.from_arrays(ps[i][pm[i]], pd[i][pm[i]], n,
+                                 capacity=cap) for i in range(m)]
+
+
+def run(out, smoke: bool = False):
+    n, e, m = (48, 400, 4) if smoke else (96, 2000, 8)
+    shards = _shards(n, e, m)
+    metrics = get_metrics()
+
+    def counters():
+        return {name: metrics.counter(f"failures/{name}").value
+                for name in ("injected", "recovered")}
+
+    # ---- clean merge: the baseline the recovery drills compare against --
+    def clean():
+        return simulate_failover_host(shards, "paper", FailureInjector())
+
+    t_clean = timeit(clean, reps=3, warmup=1)
+    _, _, info = clean()
+    assert info["restarts"] == 0
+    out.append(csv_row(
+        "fig11/clean_merge", t_clean,
+        f"machines={m} phases={info['clean_phases']} kills=0"))
+
+    # ---- failover drills: same kill, with and without snapshots ---------
+    for label, every in (("checkpoint", 1), ("recertify", None)):
+
+        def drill():
+            return simulate_failover_host(
+                shards, "paper",
+                FailureInjector(kill_schedule={VICTIM: BOUNDARY}),
+                checkpoint_every=every)
+
+        t = timeit(drill, reps=3, warmup=1)
+        before = counters()  # after timeit: delta below is ONE drill's
+        alive, _, info = drill()
+        delta = {k: counters()[k] - before[k] for k in before}
+        src = info["recoveries"][0]["source"]
+        assert src == label, (label, info["recoveries"])
+        out.append(csv_row(
+            f"fig11/failover_{label}", t,
+            f"machines={m} kills={len(info['killed'])} "
+            f"injected={delta['injected']} "
+            f"recovered={delta['recovered']} "
+            f"clean_phases={info['clean_phases']} "
+            f"remerge_phases={info['remerge_phases']} "
+            f"restarts={info['restarts']} "
+            f"ckpt_used={int(src == 'checkpoint')} "
+            f"slowdown_vs_clean={t / max(t_clean, 1e-9):.2f}x"))
+
+    # ---- engine live-state restore: zero programs run, zero retraces ----
+    from repro.engine import BridgeEngine
+
+    nq, eq = (64, 512) if smoke else (128, 2048)
+    src_q, dst_q, _ = gen.planted_bridge_graph(nq, eq, 3, seed=3)
+    eng = BridgeEngine()
+    with tempfile.TemporaryDirectory(prefix="fig11-ckpt-") as td:
+        policy = eng.enable_checkpoints(td, every=2)
+        eng.load(src_q, dst_q, nq)
+        want = eng.current_analysis("bridges")
+        for k in range(4):  # 4 writes at every=2 -> 2 cadence snapshots
+            eng.insert_edges(*gen.random_graph(nq, 32, seed=50 + k))
+        traces = eng.stats.traces
+
+        def restore():
+            return eng.restore_live()
+
+        t_restore = timeit(restore, reps=3, warmup=1)
+        retraces = eng.stats.traces - traces
+        assert retraces == 0, f"restore_live retraced {retraces}x"
+        assert eng.current_analysis("bridges") is not None and want is not None
+        out.append(csv_row(
+            "fig11/engine_restore", t_restore,
+            f"saves={policy.saves} restores={policy.restores} "
+            f"every={policy.every} warm_retraces={retraces} "
+            f"programs={eng.snapshot()['programs']}"))
+    return out

@@ -45,13 +45,21 @@ import sys
 #: fixed, so dispatches / coalesced queries / padded slots / writes and
 #: the derived occupancy_x100 are deterministic — a drift means the
 #: shape-bucket admission or the coalescing window changed — and
-#: warm_retraces must stay pinned at 0: admission never retraces)
+#: warm_retraces must stay pinned at 0: admission never retraces) + the
+#: failover drill's recovery counters (fig11: the kill schedule is fixed,
+#: so injected/recovered failures, the clean-vs-re-merge phase split, the
+#: recovery source (ckpt_used), and the checkpoint cadence's saves /
+#: restores are deterministic — a drift means machine loss stopped being
+#: detected, recovery ran twice, or the degraded-schedule re-merge grew)
 EXACT_KEYS = ("programs", "misses", "traces",
               "sfs_rounds", "hybrid_rounds", "chain_rounds",
               "boruvka_rounds", "bytes_fused", "bytes_lax",
               "spans", "stages",
               "dispatches", "coalesced", "padded", "writes",
-              "occupancy_x100", "warm_retraces")
+              "occupancy_x100", "warm_retraces",
+              "kills", "injected", "recovered", "clean_phases",
+              "remerge_phases", "restarts", "ckpt_used", "phases",
+              "saves", "restores")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

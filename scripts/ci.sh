@@ -2,7 +2,8 @@
 # CI entry point (CPU): tier-1 tests + the kernel interpret-mode suite +
 # quickstart example + the perf-path smoke benchmark suite (fig5 baseline
 # crossover, fig6 engine, fig7 connectivity, fig8 distributed kinds, fig9
-# fused-kernel byte/round records, fig10 multi-tenant serving scheduler —
+# fused-kernel byte/round records, fig10 multi-tenant serving scheduler,
+# fig11 failover recovery drills —
 # each asserts its own no-retrace/sanity/parity invariants) + the
 # bench-regression gate
 # (scripts/check_bench.py vs the committed BENCH_baseline.json: cache,
@@ -42,6 +43,9 @@ python -m benchmarks.run --only fig9 --smoke --json BENCH_fig9_kernels.json
 echo "== fig10: multi-tenant serving (scheduler vs sequential loop) =="
 python -m benchmarks.run --only fig10 --smoke --json BENCH_fig10_serving.json
 
+echo "== fig11: failover drills (kill -> recover -> re-merge parity) =="
+python -m benchmarks.run --only fig11 --smoke --json BENCH_fig11_failover.json
+
 echo "== fig6 under the span tracer: stage rollup + span-count gate =="
 python -m benchmarks.run --only fig6 --smoke --trace \
     --json BENCH_ci_trace.json --trace-json BENCH_ci_trace_rollup.json
@@ -55,5 +59,7 @@ python scripts/check_bench.py --baseline BENCH_baseline_trace.json \
     --current BENCH_ci_trace.json
 python scripts/check_bench.py --baseline BENCH_baseline_fig10.json \
     --current BENCH_fig10_serving.json
+python scripts/check_bench.py --baseline BENCH_baseline_fig11.json \
+    --current BENCH_fig11_failover.json
 
 echo "CI OK"

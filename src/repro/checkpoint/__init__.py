@@ -1,3 +1,9 @@
-from repro.checkpoint.manager import CheckpointManager, reshard_checkpoint
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    CheckpointPolicy,
+    MachineCheckpoints,
+    reshard_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "reshard_checkpoint"]
+__all__ = ["CheckpointManager", "CheckpointPolicy", "MachineCheckpoints",
+           "reshard_checkpoint"]

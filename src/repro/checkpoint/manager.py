@@ -10,6 +10,11 @@ reloads a run from 512 chips onto 256 (or 8 test devices) without
 conversion. At the scale where gathering to host is infeasible this becomes
 per-shard files + a reshard map; the manifest format already records the
 tree structure needed for that (see DESIGN.md §Fault tolerance).
+
+Serving-side layers on the same atomic core: ``CheckpointPolicy`` gives the
+engine an every-K-write-ops snapshot cadence for its live state, and
+``MachineCheckpoints`` keys independent per-machine stores for the
+distributed failover path — both specified in DESIGN.md §Fault tolerance.
 """
 from __future__ import annotations
 
@@ -122,9 +127,23 @@ class CheckpointManager:
                 return int(path.name.split("-")[1])
         return None
 
-    def restore(self, skeleton, step: int | None = None):
-        """Restore into the structure of `skeleton` (shapes/dtypes preserved
-        from disk). Returns (step, tree) or (None, None) if nothing valid."""
+    def steps(self) -> list[int]:
+        """Every verified checkpoint step, newest first. The failover path
+        walks these: recovery wants the newest snapshot satisfying a
+        caller-side predicate (coverage disjointness), not just the newest
+        one (``core.merge.simulate_failover_host``)."""
+        return [int(p.name.split("-")[1])
+                for p in sorted(self.dir.glob("step-*"), reverse=True)
+                if self._verify(p) is not None]
+
+    def restore_flat(self, step: int | None = None):
+        """Skeleton-free restore: (step, {path: array}) of the newest
+        verified checkpoint, or (None, None). The paths are the manifest's
+        ``/``-joined tree keys; callers that rebuild typed state from the
+        paths themselves (``BridgeEngine.restore_live``) use this instead
+        of ``restore`` because the saved tree's shape — e.g. WHICH
+        certificates were materialized — is data, not a skeleton the caller
+        could know up front."""
         candidates = sorted(self.dir.glob("step-*"), reverse=True)
         if step is not None:
             candidates = [self.dir / f"step-{step:010d}"]
@@ -139,8 +158,110 @@ class CheckpointManager:
                 if arr.dtype != want:
                     arr = arr.view(want)  # e.g. V2 bytes -> bfloat16
                 flat[name] = arr
-            return manifest["step"], _unflatten_into(skeleton, flat)
+            return manifest["step"], flat
         return None, None
+
+    def restore(self, skeleton, step: int | None = None):
+        """Restore into the structure of `skeleton` (shapes/dtypes preserved
+        from disk). Returns (step, tree) or (None, None) if nothing valid."""
+        found, flat = self.restore_flat(step)
+        if found is None:
+            return None, None
+        return found, _unflatten_into(skeleton, flat)
+
+
+class MachineCheckpoints:
+    """Per-machine checkpoint stores for the serving fleet.
+
+    One ``CheckpointManager`` per machine id under ``<dir>/machine-<i>``,
+    so each machine snapshots on its own cadence and a torn write on one
+    machine can never invalidate another's latest checkpoint. This is the
+    disk-backed store behind the failover path
+    (``core.merge.simulate_failover_host``, ``serve_bridges --workload
+    failover``): per-machine certificate states go in as small
+    ``{"src","dst","mask"}`` trees and come back flat, manifest+CRC
+    verified (DESIGN.md §Fault tolerance).
+    """
+
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.keep = keep
+        self._managers: dict = {}
+
+    def manager(self, machine) -> CheckpointManager:
+        if machine not in self._managers:
+            self._managers[machine] = CheckpointManager(
+                self.dir / f"machine-{machine}", keep=self.keep)
+        return self._managers[machine]
+
+    def save(self, machine, step: int, tree) -> Path:
+        return self.manager(machine).save(step, tree)
+
+    def restore_latest(self, machine):
+        """(step, flat tree) of the machine's newest verified checkpoint,
+        or None if it never checkpointed (or every snapshot is torn)."""
+        step, flat = self.manager(machine).restore_flat()
+        if step is None:
+            return None
+        return step, flat
+
+    def steps(self, machine) -> list[int]:
+        """Verified snapshot steps for one machine, newest first (the
+        failover recovery walk — same protocol as the in-memory store)."""
+        return self.manager(machine).steps()
+
+    def restore(self, machine, step: int):
+        """Flat tree of one specific verified snapshot."""
+        found, flat = self.manager(machine).restore_flat(step)
+        if found is None:
+            raise KeyError(f"machine {machine} has no valid step {step}")
+        return flat
+
+
+class CheckpointPolicy:
+    """Every-K-write-ops checkpoint cadence for a live serving state.
+
+    The engine calls ``on_write`` after each applied write op (insert /
+    delete batch); every ``every``-th write snapshots the state tree —
+    built lazily by ``tree_factory``, so non-checkpointing writes pay
+    nothing — through the wrapped ``CheckpointManager`` (atomic manifest +
+    CRC). The *checkpoint currency rule* (DESIGN.md §Fault tolerance): a
+    checkpoint is usable for recovery iff every write since it landed can
+    be replayed by the recovering party; under this policy the exposure
+    window is at most ``every - 1`` write ops, and ``last_step`` tells the
+    caller exactly how stale the newest snapshot is.
+    """
+
+    def __init__(self, manager: CheckpointManager, every: int = 8):
+        if every < 1:
+            raise ValueError(f"checkpoint cadence must be >= 1, got {every}")
+        self.manager = manager
+        self.every = int(every)
+        self.saves = 0
+        self.restores = 0
+        self.last_step: int | None = None
+        self._since = 0
+
+    def on_write(self, step: int, tree_factory) -> Path | None:
+        """Count one write op; checkpoint when the cadence comes due."""
+        self._since += 1
+        if self._since < self.every:
+            return None
+        return self.checkpoint(step, tree_factory())
+
+    def checkpoint(self, step: int, tree) -> Path:
+        """Snapshot now, regardless of cadence (engine ``checkpoint_now``)."""
+        path = self.manager.save(step, tree)
+        self.saves += 1
+        self.last_step = step
+        self._since = 0
+        return path
+
+    def snapshot(self) -> dict:
+        """Counter rollup merged into ``BridgeEngine.snapshot()``."""
+        return {"saves": self.saves, "restores": self.restores,
+                "every": self.every, "last_step": self.last_step,
+                "pending_writes": self._since}
 
 
 def reshard_checkpoint(tree, mesh, specs):

@@ -63,6 +63,18 @@ class ProgramCache:
     def __len__(self) -> int:
         return len(self._programs)
 
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._programs
+
+    def keys(self):
+        """The cached program keys (read-only view). The checkpoint-restore
+        path reports these to prove warm-serve readiness: restoring a
+        ``LiveState`` into an engine whose cache already holds the bucket's
+        programs must serve with zero retraces — restore itself runs no
+        program, so the set must be unchanged across it
+        (``BridgeEngine.restore_live``; pinned by fig11 EXACT counters)."""
+        return self._programs.keys()
+
 
 # ------------------------------------------------------------ one-shot
 def build_analysis_program(n_bucket: int, kind: str, final: str, on_trace,

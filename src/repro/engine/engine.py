@@ -79,9 +79,15 @@ from repro.engine.dispatch import (
     build_distributed_program,
     build_final_program,
 )
-from repro.engine.state import EngineStats, LiveState, masked_arrays
+from repro.engine.state import (
+    EngineStats,
+    LiveState,
+    live_state_from_flat,
+    live_state_tree,
+    masked_arrays,
+)
 from repro.graph.datastructs import EdgeList, bucket_capacity
-from repro.obs import get_tracer
+from repro.obs import get_metrics, get_tracer
 
 __all__ = ["BridgeEngine", "EngineStats", "analyze_batch",
            "find_bridges_batch", "get_default_engine"]
@@ -127,6 +133,8 @@ class BridgeEngine:
         self._cache = ProgramCache(self.stats)
         self._live: LiveState | None = None
         self._scheduler = None  # lazy BridgeScheduler (see .scheduler)
+        self._ckpt = None       # CheckpointPolicy (see enable_checkpoints)
+        self._write_ops = 0     # applied write ops = checkpoint step clock
 
     @property
     def _programs(self) -> dict:
@@ -200,7 +208,89 @@ class BridgeEngine:
             snap["live_graph_edges"] = self._live.count
         if self._scheduler is not None:
             snap["scheduler"] = self._scheduler.snapshot()
+        if self._ckpt is not None:
+            snap["checkpoint"] = self._ckpt.snapshot()
         return snap
+
+    # ------------------------------------------------------------- checkpoint
+    def enable_checkpoints(self, directory, *, every: int = 8, keep: int = 3):
+        """Attach an every-K-write-ops ``CheckpointPolicy``: from now on
+        each ``insert_edges``/``delete_edges`` counts one write op, and
+        every ``every``-th write snapshots the live state (full buffer +
+        materialized certificate states + counters) through an atomic
+        manifest+CRC ``CheckpointManager`` under ``directory``. See
+        DESIGN.md §Fault tolerance for the currency rule this cadence
+        implements. Returns the policy (counters in ``snapshot()``)."""
+        from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+
+        self._ckpt = CheckpointPolicy(
+            CheckpointManager(directory, keep=keep), every=every)
+        return self._ckpt
+
+    def _after_write(self):
+        """One write op applied: advance the checkpoint clock and let the
+        policy decide whether this step snapshots (the tree is only built
+        when it does)."""
+        self._write_ops += 1
+        if self._ckpt is None or self._live is None:
+            return
+        with get_tracer().span("engine/checkpoint_maybe",
+                               step=self._write_ops):
+            self._ckpt.on_write(self._write_ops,
+                                lambda: live_state_tree(self._live))
+
+    def checkpoint_now(self) -> "object":
+        """Snapshot the live state immediately, regardless of cadence."""
+        if self._ckpt is None:
+            raise RuntimeError("checkpointing not enabled: call "
+                               "enable_checkpoints() first")
+        if self._live is None:
+            raise RuntimeError("no live graph: call load() first")
+        with get_tracer().span("engine/checkpoint", step=self._write_ops):
+            return self._ckpt.checkpoint(self._write_ops,
+                                         live_state_tree(self._live))
+
+    def restore_live(self, step: int | None = None) -> int:
+        """Restore the live state from the newest (or ``step``'s) verified
+        checkpoint — the serving-side recovery path (DESIGN.md §Fault
+        tolerance).
+
+        Restore runs NO compiled program: buffers are device_put straight
+        from the verified arrays, lazy certificates that were
+        unmaterialized at save time come back as ``None`` (they
+        re-materialize from the restored full buffer on first query,
+        through the already-cached ``cert_load`` program), and the program
+        cache is untouched — so an engine that was serving a bucket before
+        the restore serves it after with zero retraces (asserted in
+        tests/test_failover.py, pinned by fig11). Ticks
+        ``failures/recovered``. Returns the restored checkpoint step."""
+        if self._ckpt is None:
+            raise RuntimeError("checkpointing not enabled: call "
+                               "enable_checkpoints() first")
+        tr = get_tracer()
+        with tr.span("recover/restore_live", step=step) as sp:
+            found, flat = self._ckpt.manager.restore_flat(step)
+            if found is None:
+                raise RuntimeError(
+                    f"no verified checkpoint to restore under "
+                    f"{self._ckpt.manager.dir}")
+            live = live_state_from_flat(flat)
+            live.full = tuple(jnp.asarray(x) for x in live.full)
+            live.certs = {name: tuple(jnp.asarray(x) for x in state)
+                          for name, state in live.certs.items()}
+            for name in certificate_names():
+                live.certs.setdefault(name, None)
+            sp.sync(live.full)
+            self._live = live
+            self._write_ops = found
+            self._ckpt.restores += 1
+            get_metrics().counter("failures/recovered").inc()
+            if getattr(sp, "attrs", None) is not None:
+                # enrich the span in place: programs cached across the
+                # restore (must be unchanged — warm-serve readiness)
+                sp.attrs.update(warm_programs=len(self._cache),
+                                n_bucket=live.n_bucket, restored_step=found)
+        return found
 
     # -------------------------------------------------------------- scheduler
     @property
@@ -597,6 +687,7 @@ class BridgeEngine:
                 live.full = tuple(sp.sync(
                     afn(fs, fd, fm, recv.src, recv.dst, recv.mask)))
             live.count = needed
+            self._after_write()
             return self.current_analysis(kind=kind, final=final,
                                          certificate=certificate)
 
@@ -664,6 +755,7 @@ class BridgeEngine:
                     live.rebuilds[name] += 1
                     live.certs[name] = self._cert_load(name, n_bucket,
                                                        live.full)
+            self._after_write()
             return self.current_analysis(kind=kind, final=final,
                                          certificate=certificate)
 

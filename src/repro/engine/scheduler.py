@@ -134,7 +134,8 @@ class BridgeScheduler:
 
     def __init__(self, engine, *, max_batch: int = 8,
                  metrics: MetricsRegistry | None = None,
-                 straggle_threshold: float = 20.0):
+                 straggle_threshold: float = 20.0, name: str = "sched",
+                 monitor=None, machine=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.engine = engine
@@ -147,11 +148,17 @@ class BridgeScheduler:
         self._writes: list[_Pending] = []
         self._seq = 0
         self._tenants: set[str] = set()
-        # the drain-loop heartbeat: gauge sched/step_s + EWMA + straggle
+        # the drain-loop heartbeat: gauge <name>/step_s + EWMA + straggle
         # counter in the GLOBAL registry (watchdog metrics are fleet-level
-        # by design — runtime/watchdog.py)
+        # by design — runtime/watchdog.py). ``name`` keeps per-engine loops
+        # distinct when several schedulers serve one fleet; ``monitor``/
+        # ``machine`` additionally beat a HeartbeatMonitor per non-empty
+        # drain, which is how a scheduler's silence marks its machine dead
+        # (DESIGN.md §Fault tolerance).
         self._watchdog = StepWatchdog(threshold=straggle_threshold,
-                                      name="sched")
+                                      name=name)
+        self._monitor = monitor
+        self._machine = machine if machine is not None else name
         self._depth_gauge = self.metrics.gauge("sched/queue_depth")
         self._occ_gauge = self.metrics.gauge("sched/batch_occupancy")
 
@@ -294,6 +301,8 @@ class BridgeScheduler:
             self._depth_gauge.set(self.pending)
         self.stats.drains += 1
         self._watchdog.stop(self.stats.drains)
+        if self._monitor is not None:
+            self._monitor.beat(self._machine)
         return self.stats.completed - done_before
 
     def drain_all(self, max_steps: int = 10_000) -> int:

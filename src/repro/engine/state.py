@@ -116,3 +116,55 @@ def masked_arrays(out):
     """(src, dst, mask) device buffers -> host (src[mask], dst[mask])."""
     s, d, m = (np.asarray(x) for x in out)
     return s[m], d[m]
+
+
+def live_state_tree(live: LiveState) -> dict:
+    """``LiveState`` -> checkpointable dict pytree.
+
+    ``checkpoint.CheckpointManager`` flattens this to ``/``-joined paths:
+    ``full/<i>`` for the full-buffer triplet, ``certs/<name>/<i>`` per
+    MATERIALIZED certificate state slot (lazy unmaterialized certificates
+    are simply absent — they re-materialize from the restored full buffer
+    on first query, exactly like after ``load``), ``rebuilds/<name>`` and
+    ``meta/*`` as 0-d scalars. ``live_state_from_flat`` is the inverse.
+    """
+    return {
+        "full": list(live.full),
+        "certs": {name: list(state)
+                  for name, state in live.certs.items() if state is not None},
+        "rebuilds": {name: int(v) for name, v in live.rebuilds.items()},
+        "meta": {"count": int(live.count), "n_nodes": int(live.n_nodes),
+                 "n_bucket": int(live.n_bucket)},
+    }
+
+
+def live_state_from_flat(flat: dict) -> LiveState:
+    """Rebuild a ``LiveState`` from ``CheckpointManager.restore_flat``
+    paths (host numpy arrays; the engine device-puts and re-registers the
+    lazy certificates in ``restore_live``)."""
+    full: dict = {}
+    certs: dict = {}
+    rebuilds: dict = {}
+    meta: dict = {}
+    for path, arr in flat.items():
+        head, _, rest = path.partition("/")
+        if head == "full":
+            full[int(rest)] = arr
+        elif head == "certs":
+            name, _, slot = rest.partition("/")
+            certs.setdefault(name, {})[int(slot)] = arr
+        elif head == "rebuilds":
+            rebuilds[rest] = int(arr)
+        elif head == "meta":
+            meta[rest] = int(arr)
+        else:
+            raise ValueError(f"unknown live-state checkpoint path {path!r}")
+    return LiveState(
+        certs={name: tuple(slots[i] for i in range(len(slots)))
+               for name, slots in certs.items()},
+        rebuilds=rebuilds,
+        full=tuple(full[i] for i in range(len(full))),
+        count=meta["count"],
+        n_nodes=meta["n_nodes"],
+        n_bucket=meta["n_bucket"],
+    )

@@ -595,12 +595,36 @@ def main(argv=None):
     ap.add_argument("--deltas", type=int, default=16,
                     help="incremental updates served after the batched phase")
     ap.add_argument("--delta-edges", type=int, default=64)
-    ap.add_argument("--workload", choices=["insert", "churn", "multitenant"],
+    ap.add_argument("--workload",
+                    choices=["insert", "churn", "multitenant", "failover"],
                     default="insert",
                     help="incremental phase: insert-only, churn with "
-                         "interleaved link failures (delete_edges), or the "
+                         "interleaved link failures (delete_edges), the "
                          "multitenant continuous-batching request path "
-                         "(scheduler vs sequential loop)")
+                         "(scheduler vs sequential loop), or the "
+                         "failover drill (kill a machine mid-serve, watchdog "
+                         "detection, checkpoint/recertify recovery — "
+                         "DESIGN.md §Fault tolerance)")
+    ap.add_argument("--machines", type=int, default=4,
+                    help="failover workload: serving fleet size")
+    ap.add_argument("--steps", type=int, default=12,
+                    help="failover workload: churn/serve steps")
+    ap.add_argument("--kill-machine", type=int, default=None, metavar="I",
+                    help="failover workload: machine to kill mid-serve")
+    ap.add_argument("--kill-at-step", type=int, default=None, metavar="S",
+                    help="failover workload: serve step at which machine I "
+                         "falls silent (default: steps // 3)")
+    ap.add_argument("--ckpt-every", type=int, default=4,
+                    help="failover workload: per-machine certificate "
+                         "snapshot cadence in steps (0 disables; recovery "
+                         "then always re-certifies the dead shard)")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="failover workload: checkpoint directory "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--schedule",
+                    choices=["paper", "xor", "hierarchical"],
+                    default="paper",
+                    help="failover workload: merge schedule under drill")
     ap.add_argument("--delete-ratio", type=float, default=0.25,
                     help="churn workload: fraction of deltas that are "
                          "deletions")
@@ -642,17 +666,29 @@ def main(argv=None):
         args.n = min(args.n, 128)
         args.edges = min(args.edges, 1024)
         args.deltas = min(args.deltas, 4)
+        args.steps = min(args.steps, 8)
+        args.delta_edges = min(args.delta_edges, 16)
         if args.workload == "multitenant":
             args.queries = min(args.queries, 6)
+    if args.workload == "failover":
+        if args.kill_machine is not None and args.kill_at_step is None:
+            args.kill_at_step = args.steps // 3
+        if args.kill_machine is not None and not (
+                0 <= args.kill_machine < args.machines):
+            ap.error("--kill-machine must name a fleet machine")
 
     engine = BridgeEngine(certificate=args.certificate)
     metrics = MetricsRegistry()
     tracer = obs.enable_tracing() if args.trace_out else None
     multitenant = None
+    failover = None
     per_kind: list = []
     try:
         with profiler_trace(args.profile_dir):
-            if args.workload == "multitenant":
+            if args.workload == "failover":
+                from repro.launch.failover import serve_failover
+                failover = serve_failover(args)
+            elif args.workload == "multitenant":
                 multitenant = serve_multitenant(engine, kinds, args, metrics)
             else:
                 queries = make_queries(args.queries, args.n, args.edges,
@@ -693,6 +729,8 @@ def main(argv=None):
                          "tenants": args.tenants}}
     if multitenant is not None:
         report["multitenant"] = multitenant
+    if failover is not None:
+        report["failover"] = failover
     if tracer is not None:
         tracer.write_chrome_trace(args.trace_out)
         stages = tracer.stage_rollup()

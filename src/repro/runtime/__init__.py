@@ -1,4 +1,5 @@
-from repro.runtime.failures import FailureInjector
-from repro.runtime.watchdog import StepWatchdog
+from repro.runtime.failures import FailureInjector, SimulatedFailure
+from repro.runtime.watchdog import HeartbeatMonitor, StepWatchdog
 
-__all__ = ["StepWatchdog", "FailureInjector"]
+__all__ = ["StepWatchdog", "HeartbeatMonitor", "FailureInjector",
+           "SimulatedFailure"]

@@ -1,14 +1,23 @@
-"""Failure injection for the restart path (tests + chaos drills).
+"""Failure injection for the restart + failover paths (tests, chaos drills).
 
-``FailureInjector`` raises a simulated host failure at a chosen step; the
-training driver's restart loop (launch/train.py) must recover from the last
-checkpoint and converge to the same final state as an uninterrupted run —
-that equivalence is asserted in tests/test_fault_tolerance.py.
+Two failure shapes:
 
-Each injected failure ticks the global ``failures/injected`` counter
-(``repro.obs``), so chaos drills can confirm from one ``obs.snapshot()``
-that the failures they scheduled actually fired — a drill whose counter
-stayed flat tested nothing.
+* ``maybe_fail(step)`` — raise a simulated host failure at a chosen step;
+  the training driver's restart loop (launch/train.py) must recover from
+  the last checkpoint and converge to the same final state as an
+  uninterrupted run (tests/test_fault_tolerance.py).
+
+* ``killed_machines(step)`` — per-machine kill schedules for the serving
+  failover path: ``kill_schedule={machine: step}`` declares which machines
+  die and when. ``core.merge.simulate_failover_host`` polls it at every
+  merge phase boundary, and ``serve_bridges --workload failover`` at every
+  serve step; a killed machine stops heartbeating and its in-memory state
+  is gone (tests/test_failover.py, DESIGN.md §Fault tolerance).
+
+Every injected failure — raised or kill — ticks the global
+``failures/injected`` counter (``repro.obs``), so chaos drills can confirm
+from one ``obs.snapshot()`` that the failures they scheduled actually
+fired — a drill whose counter stayed flat tested nothing.
 """
 from __future__ import annotations
 
@@ -20,9 +29,12 @@ class SimulatedFailure(RuntimeError):
 
 
 class FailureInjector:
-    def __init__(self, fail_at_steps: set[int] | None = None):
+    def __init__(self, fail_at_steps: set[int] | None = None,
+                 kill_schedule: dict[int, int] | None = None):
         self.fail_at = set(fail_at_steps or ())
         self.fired: set[int] = set()
+        self.kill_at = dict(kill_schedule or {})
+        self.killed: set[int] = set()
         self._counter = get_metrics().counter("failures/injected")
 
     def maybe_fail(self, step: int):
@@ -30,3 +42,15 @@ class FailureInjector:
             self.fired.add(step)
             self._counter.inc()
             raise SimulatedFailure(f"injected host failure at step {step}")
+
+    def killed_machines(self, step: int) -> tuple[int, ...]:
+        """Machines whose scheduled kill step has arrived (``<= step``).
+        Each kill fires exactly once (and ticks ``failures/injected``
+        once), however often the same step is polled."""
+        out = []
+        for machine, at in sorted(self.kill_at.items()):
+            if at <= step and machine not in self.killed:
+                self.killed.add(machine)
+                self._counter.inc()
+                out.append(machine)
+        return tuple(out)

@@ -1,4 +1,4 @@
-"""Straggler mitigation: per-step deadline watchdog.
+"""Straggler mitigation + liveness: step watchdog and fleet heartbeats.
 
 At pod scale a slow host (thermal throttle, failing HBM, network flap) shows
 up as a step-time outlier on *every* host (SPMD barrier). The watchdog keeps
@@ -15,6 +15,13 @@ a counter — so a fleet dashboard reads one ``obs.snapshot()`` instead of
 polling watchdog objects (DESIGN.md §Observability). ``name`` prefixes
 the metric names so multiple loops (train, serve) coexist in the
 registry.
+
+``HeartbeatMonitor`` is the fleet-level consumer of those beats: one
+last-beat timestamp per machine, and a machine whose beat goes stale past
+the timeout is declared dead EXACTLY ONCE (``newly_dead``) — the serving
+failover path keys recovery off that declaration, so a flapping poll loop
+can never trigger a second recovery of the same machine (DESIGN.md
+§Fault tolerance).
 """
 from __future__ import annotations
 
@@ -67,3 +74,66 @@ class StepWatchdog:
         self.avg = self.ewma_coef * self.avg + (1 - self.ewma_coef) * dt
         self._avg_gauge.set(self.avg)
         return dt
+
+
+class HeartbeatMonitor:
+    """Dead-machine detection over per-machine heartbeats.
+
+    Each fleet member calls ``beat(machine)`` once per completed step (the
+    serving loop's analogue of the ``sched/step_s`` watchdog beat — a
+    ``BridgeScheduler`` given ``monitor=``/``machine=`` beats here from its
+    drain loop). ``newly_dead(now)`` returns the machines whose last beat
+    is staler than ``timeout`` that have NOT been declared before: one
+    missed beat past the deadline marks the machine dead, exactly once.
+    Recovery code keys off ``newly_dead``; ``dead`` is the cumulative set.
+
+    ``now`` defaults to wall clock (``time.monotonic()``), but both
+    ``beat`` and ``newly_dead`` take an explicit ``now`` so deterministic
+    drills can run on a logical clock (the failover workload passes the
+    step index; tests pass literals). Beats also land in per-machine
+    ``{name}/machine{i}/beat`` gauges and declarations tick the
+    ``{name}/dead_machines`` counter, so liveness is readable from one
+    ``obs.snapshot()`` like every other signal here.
+    """
+
+    def __init__(self, machines=(), *, timeout: float = 1.5,
+                 name: str = "fleet"):
+        self.timeout = timeout
+        self.name = name
+        self.last: dict = {}
+        self.declared: set = set()
+        self._m = get_metrics()
+        self._dead_counter = self._m.counter(f"{name}/dead_machines")
+        for machine in machines:
+            self.last[machine] = None  # known, not yet beating
+
+    def beat(self, machine, now: float | None = None):
+        if machine in self.declared:
+            return  # a declared-dead machine's stale beat must not resurrect
+        now = time.monotonic() if now is None else now
+        self.last[machine] = now
+        self._m.gauge(f"{self.name}/machine{machine}/beat").set(now)
+
+    @property
+    def dead(self) -> frozenset:
+        """Machines declared dead so far (cumulative)."""
+        return frozenset(self.declared)
+
+    def newly_dead(self, now: float | None = None) -> tuple:
+        """Declare (once) every machine whose beat missed the deadline.
+
+        A machine that registered but never beat is dead once ``now``
+        exceeds the timeout from its registration... which we cannot know —
+        so never-beaten machines are only declared after their first beat
+        goes stale; register-then-beat immediately in loops that care.
+        """
+        now = time.monotonic() if now is None else now
+        out = []
+        for machine, last in sorted(self.last.items()):
+            if machine in self.declared or last is None:
+                continue
+            if now - last > self.timeout:
+                self.declared.add(machine)
+                self._dead_counter.inc()
+                out.append(machine)
+        return tuple(out)

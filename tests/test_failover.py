@@ -1,0 +1,270 @@
+"""Fault-tolerant serving: killed-machine merge drills, engine
+checkpoint/restore, and watchdog death detection (DESIGN.md §Fault
+tolerance).
+
+The merge drills run ``core.merge.simulate_failover_host`` — the REAL phase
+plans with a ``FailureInjector`` killing machines at phase boundaries — and
+check result parity against the host recompute for every schedule, every
+kill boundary, and every registry kind. The engine drills round-trip
+``LiveState`` through ``CheckpointPolicy`` and assert the restore itself
+compiles nothing (zero retraces, identical program-cache keys). The
+watchdog drills pin the exactly-once semantics of both failure counters.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import MachineCheckpoints
+from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
+from repro.core.bridges_host import bridges_dfs, bridges_from_edgelist
+from repro.core.certs import certificate_builder
+from repro.core.merge import (
+    degraded_phase_plan,
+    merge_phase_plan,
+    simulate_failover_host,
+    simulate_merge_host,
+)
+from repro.core.partition import partition_edges
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+from repro.graph.datastructs import EdgeList
+from repro.obs import get_metrics
+from repro.runtime.failures import FailureInjector
+from repro.runtime.watchdog import HeartbeatMonitor
+
+N, E, M = 48, 400, 4
+GRID = (2, 2)
+SCHEDULES = ("paper", "xor", "hierarchical")
+
+_SRC, _DST, _ = gen.planted_bridge_graph(N, E, 3, seed=7)
+_PS, _PD, _PM = partition_edges(_SRC, _DST, N, M, seed=1)
+_CAP = _PS.shape[1]
+SHARDS = [EdgeList.from_arrays(_PS[i][_PM[i]], _PD[i][_PM[i]], N,
+                               capacity=_CAP) for i in range(M)]
+WANT = {tuple(sorted(p)) for p in bridges_dfs(_SRC, _DST, N)}
+
+
+def _bridges(cert) -> set:
+    return {tuple(sorted(p)) for p in bridges_from_edgelist(cert)}
+
+
+def _grid(schedule):
+    return GRID if schedule == "hierarchical" else None
+
+
+# --------------------------------------------------- killed-machine drills
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("ckpt", [None, 1], ids=["no-ckpt", "ckpt"])
+def test_kill_every_boundary_every_victim(schedule, ckpt):
+    """Kill each victim at each phase boundary of each schedule: the
+    surviving fleet must recover to exact bridge parity with the host
+    recompute, and after the recovery fan-out every survivor answers."""
+    boundaries = len(merge_phase_plan(
+        schedule, M, grid=_grid(schedule))) + 1
+    for p in range(boundaries):
+        for victim in (0, M - 1):
+            inj = FailureInjector(kill_schedule={victim: p})
+            alive, certs, info = simulate_failover_host(
+                SHARDS, schedule, inj, grid=_grid(schedule),
+                checkpoint_every=ckpt)
+            assert victim not in alive and info["killed"] == [victim]
+            assert info["clean_phases"] == p
+            got = _bridges(certs[alive.index(info["answering"])])
+            assert got == WANT, (schedule, p, ckpt, victim)
+            assert all(_bridges(c) == WANT for c in certs)
+            src = info["recoveries"][0]["source"]
+            if p == 0:
+                # kills are processed before the boundary snapshot, so no
+                # checkpoint exists yet and nobody absorbed the victim
+                assert src == "recertify"
+            else:
+                assert src in ("absorbed", "checkpoint", "recertify")
+
+
+@pytest.mark.parametrize("kind", ANALYSIS_KINDS)
+def test_kill_parity_every_registry_kind(kind):
+    """Mid-merge loss, then the kind's host final on the recovered
+    certificate — identical to the single-device answer, for every
+    analysis-registry kind and every schedule."""
+    analysis = get_analysis(kind)
+    certify = certificate_builder(analysis.certificate)
+    want = analysis.host_fn(_SRC, _DST, N)
+    for schedule in SCHEDULES:
+        inj = FailureInjector(kill_schedule={1: 1})
+        alive, certs, info = simulate_failover_host(
+            SHARDS, schedule, inj, grid=_grid(schedule), certify=certify,
+            checkpoint_every=2)
+        s, d = certs[alive.index(info["answering"])].to_numpy()
+        got = analysis.host_fn(s, d, N)
+        if analysis.kind == "2ecc":
+            assert np.array_equal(got, want), (kind, schedule)
+        else:
+            assert got == want, (kind, schedule)
+
+
+def test_no_kill_matches_simulate_merge_host():
+    """With no failures the drill is exactly the clean schedule."""
+    certify = certificate_builder("2ec")
+    base = [certify(sh, capacity=None) for sh in SHARDS]
+    for schedule in SCHEDULES:
+        alive, certs, info = simulate_failover_host(
+            SHARDS, schedule, FailureInjector(), grid=_grid(schedule))
+        assert alive == list(range(M)) and info["restarts"] == 0
+        ref = simulate_merge_host(base, schedule, grid=_grid(schedule))
+        assert _bridges(certs[info["answering"]]) == \
+            _bridges(ref[0 if schedule == "paper" else info["answering"]])
+        assert _bridges(certs[info["answering"]]) == WANT
+
+
+def test_multi_kill_and_counters():
+    """Two machines lost at different boundaries: parity still holds and
+    the recovered counter ticks once per machine handled."""
+    counter = get_metrics().counter("failures/recovered")
+    for ks in ({0: 0, 3: 1}, {1: 1, 2: 2}, {0: 1, 1: 1}):
+        before = counter.value
+        inj = FailureInjector(kill_schedule=dict(ks))
+        alive, certs, info = simulate_failover_host(
+            SHARDS, "paper", inj, checkpoint_every=1)
+        assert sorted(info["killed"]) == sorted(ks)
+        assert counter.value - before == len(ks)
+        assert all(_bridges(c) == WANT for c in certs)
+
+
+def test_disk_backed_machine_checkpoints(tmp_path):
+    """The real atomic+CRC per-machine store recovers a lost block owner
+    from its snapshot, not by re-certifying the shard."""
+    store = MachineCheckpoints(tmp_path / "fleet")
+    inj = FailureInjector(kill_schedule={0: 1})
+    alive, certs, info = simulate_failover_host(
+        SHARDS, "paper", inj, checkpoint_every=1, checkpoints=store)
+    assert info["recoveries"][0]["source"] == "checkpoint"
+    assert all(_bridges(c) == WANT for c in certs)
+    # the store kept verified history for the survivors too
+    assert store.steps(1), "surviving machines keep snapshotting"
+
+
+def test_degraded_plan_covers_survivors():
+    """The degraded plan is the schedule renumbered onto the survivors:
+    ceil(log2(survivors)) phases, naming only surviving machines."""
+    import math
+    for schedule in SCHEDULES:
+        for dead in (0, 2):
+            alive = [i for i in range(M) if i != dead]
+            plan, sched = degraded_phase_plan(schedule, alive)
+            assert len(plan) == math.ceil(math.log2(len(alive)))
+            named = {i for pairs in plan for pair in pairs for i in pair}
+            assert dead not in named
+            assert named <= set(alive)
+
+
+# ------------------------------------------- engine checkpoint / restore
+def test_engine_checkpoint_restore_zero_retraces(tmp_path):
+    """Round-trip ``LiveState`` through ``CheckpointPolicy``: restore must
+    run no program (trace counter frozen, program-cache keys unchanged)
+    and serving after restore stays retrace-free."""
+    src, dst, _ = gen.planted_bridge_graph(64, 600, 3, seed=3)
+    eng = BridgeEngine()
+    policy = eng.enable_checkpoints(tmp_path / "engine", every=2)
+    eng.load(src, dst, 64)
+    want = eng.current_analysis("bridges")
+
+    eng.checkpoint_now()
+    assert policy.saves == 1
+
+    # drift the live state past the snapshot, then lose it
+    ds, dd = gen.random_graph(64, 32, seed=11)
+    eng.insert_edges(ds, dd)
+    drifted = eng.current_analysis("bridges")
+
+    traces = eng.stats.traces
+    programs = set(eng._cache.keys())
+    step = eng.restore_live()
+    assert eng.stats.traces == traces, "restore itself must run no program"
+    assert set(eng._cache.keys()) == programs
+    assert policy.restores == 1
+    assert eng.snapshot()["checkpoint"]["restores"] == 1
+
+    got = eng.current_analysis("bridges")
+    assert got == want and (drifted == want or got != drifted)
+    # post-restore serving: warm, zero retraces (same delta shape bucket
+    # as the pre-restore insert — the programs are already cached)
+    traces = eng.stats.traces
+    for k in range(3):
+        eng.current_analysis("bridges")
+        eng.insert_edges(*gen.random_graph(64, 32, seed=13 + k))
+    assert eng.stats.traces == traces
+
+
+def test_engine_checkpoint_cadence(tmp_path):
+    """``every=K`` snapshots on exactly every K-th write op."""
+    src, dst, _ = gen.planted_bridge_graph(64, 600, 3, seed=3)
+    eng = BridgeEngine()
+    policy = eng.enable_checkpoints(tmp_path / "cadence", every=3)
+    eng.load(src, dst, 64)
+    for k in range(7):
+        eng.insert_edges(*gen.random_graph(64, 8, seed=100 + k))
+    assert policy.saves == 2  # writes 3 and 6
+    assert policy.snapshot()["pending_writes"] == 1
+    with pytest.raises(ValueError):
+        eng.enable_checkpoints(tmp_path / "bad", every=0)
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    eng = BridgeEngine()
+    with pytest.raises(RuntimeError):
+        eng.restore_live()
+    eng.enable_checkpoints(tmp_path / "empty")
+    with pytest.raises(RuntimeError):
+        eng.restore_live()
+
+
+# ------------------------------------------------- watchdog + injector
+def test_heartbeat_death_declared_exactly_once():
+    mon = HeartbeatMonitor(machines=range(3), timeout=1.5, name="t1fleet")
+    counter = get_metrics().counter("t1fleet/dead_machines")
+    before = counter.value
+    for i in range(3):
+        mon.beat(i, now=0.0)
+    mon.beat(0, now=1.0)
+    mon.beat(1, now=1.0)
+    assert mon.newly_dead(now=1.0) == ()
+    assert mon.newly_dead(now=2.0) == (2,)   # 2.0 - 0.0 > 1.5
+    mon.beat(0, now=2.5)
+    mon.beat(1, now=2.5)
+    assert mon.newly_dead(now=3.0) == ()     # declared once, stays dead
+    assert mon.dead == frozenset({2})
+    assert counter.value - before == 1
+    mon.beat(2, now=3.5)                     # stale beat: no resurrection
+    assert mon.dead == frozenset({2})
+    assert mon.newly_dead(now=9.0) == (0, 1)
+
+
+def test_injector_kill_schedule_fires_once():
+    counter = get_metrics().counter("failures/injected")
+    before = counter.value
+    inj = FailureInjector(kill_schedule={1: 5, 2: 5, 0: 7})
+    assert inj.killed_machines(4) == ()
+    assert inj.killed_machines(5) == (1, 2)
+    assert inj.killed_machines(6) == ()      # each kill fires exactly once
+    assert inj.killed_machines(8) == (0,)    # late poll still fires it
+    assert counter.value - before == 3
+
+
+# ------------------------------------------------- serving-level drill
+@pytest.mark.slow
+def test_serve_failover_workload():
+    """`serve_bridges --workload failover`: kill mid-churn, watchdog
+    detection, recovery, and post-recovery host parity, in-process."""
+    from repro.launch.serve_bridges import main
+
+    report = main(["--workload", "failover", "--smoke", "--machines", "4",
+                   "--kill-machine", "1", "--kill-at-step", "2",
+                   "--ckpt-every", "1", "--n", "64", "--edges", "512"])
+    fo = report["failover"]
+    assert fo["final_parity"] and fo["survivors"] == 3
+    assert fo["recovery"]["source"] == "checkpoint"
+    assert fo["recovery"]["machine"] == 1
+    assert fo["parity_failures_post_recovery"] == 0
+    assert fo["counters"]["failures/injected"] == 1
+    assert fo["counters"]["failures/recovered"] == 1
+    assert fo["counters"]["fleet/dead_machines"] == 1
+    assert fo["final_bridges"] > 0, "drill must compare a non-trivial set"
