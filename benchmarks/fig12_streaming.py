@@ -1,0 +1,120 @@
+"""Fig 12 (beyond-paper): streaming chunked ingest vs one-shot load —
+serve graphs bigger than one device.
+
+The one-shot ``load`` path materializes the full O(E) edge buffer on
+device before anything runs; on a dense world that buffer dwarfs the
+certificates it exists to feed (the certificate holds <= 2(n-1) of the E
+edges — the whole point of the paper's sparsification). Fig 12 measures
+what the streaming path (DESIGN.md §Streaming ingest) buys on the SAME
+dense world, one engine, two phases:
+
+  * one-shot   — ``engine.load`` + every registry kind queried: the
+                 pre-streaming serving path. Peak live bytes includes the
+                 full edge buffer.
+  * streamed   — ``engine.load_stream`` + the same edges fed through
+                 ``ingest_chunk`` in arbitrary-size slices, then every
+                 kind queried. Edges flow through ONE chunk-bucket
+                 buffer; peak live bytes is O(chunk + certificate).
+
+Both phases must answer every analysis kind IDENTICALLY (the disjoint-
+union streaming identity), the streamed peak must hold under 50% of the
+one-shot peak (the headline, asserted), and neither phase may retrace
+after the warmup (the chunk bucket is the same ``admission_capacity``
+program currency as everything else — asserted).
+
+The closing records pin the ingest counters EXACTLY
+(``scripts/check_bench.py``): ``fig12/ingest_counters`` (chunks / folds /
+spilled / replays — deterministic for the fixed ingest script) and
+``fig12/streaming_cache`` (programs / misses / traces / warm_retraces=0).
+Baseline: ``BENCH_baseline_fig12.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.connectivity.registry import analysis_kinds, get_analysis
+from repro.engine import BridgeEngine
+from repro.graph import generators as gen
+from repro.obs import get_tracer
+
+
+def _same(kind, got, want):
+    if get_analysis(kind).kind == "2ecc":
+        return np.array_equal(np.asarray(got), np.asarray(want))
+    return got == want
+
+
+def run(out, smoke: bool = False):
+    n, e, chunk = (96, 3000, 128) if smoke else (256, 12000, 512)
+    kinds = analysis_kinds()
+    with get_tracer().span("host/datagen", what="dense world"):
+        src, dst = gen.random_graph(n, e, seed=12)
+
+    engine = BridgeEngine()
+
+    # ---- warmup: both paths' program sets on the same buckets ----------
+    engine.load(src, dst, n)
+    for kind in kinds:
+        engine.current_analysis(kind)
+    engine.load_stream(src[: 2 * chunk], dst[: 2 * chunk], n,
+                       chunk_edges=chunk)
+    engine.ingest_chunk(src[2 * chunk: 2 * chunk + 7],
+                        dst[2 * chunk: 2 * chunk + 7])  # ragged slice
+    for kind in kinds:
+        engine.current_analysis(kind)
+    warm_traces = engine.stats.traces
+
+    # ---- one-shot: full buffer resident, then every kind ---------------
+    t0 = time.perf_counter()
+    engine.load(src, dst, n)
+    t_load = time.perf_counter() - t0
+    want = {kind: engine.current_analysis(kind) for kind in kinds}
+    one_peak = engine.peak_live_bytes
+    out.append(csv_row("fig12/one_shot_load", t_load,
+                       f"E={e} peak_mb={one_peak / 2 ** 20:.3f}"))
+
+    # ---- streamed: same edges through one chunk-bucket buffer ----------
+    step = 2 * chunk  # deliberately != the bucket: exercises the split
+    t0 = time.perf_counter()
+    engine.load_stream(src[:0], dst[:0], n, chunk_edges=chunk)
+    for lo in range(0, e, step):
+        engine.ingest_chunk(src[lo:lo + step], dst[lo:lo + step])
+    t_ingest = time.perf_counter() - t0
+    for kind in kinds:
+        assert _same(kind, engine.current_analysis(kind), want[kind]), (
+            f"fig12: streamed {kind} diverged from one-shot")
+    stream_peak = engine.peak_live_bytes
+    out.append(csv_row(
+        "fig12/streamed_ingest", t_ingest,
+        f"E={e} chunk={chunk} edges_per_s={e / max(t_ingest, 1e-9):.1f} "
+        f"peak_mb={stream_peak / 2 ** 20:.3f}"))
+
+    # ---- the headline: peak device memory, streamed vs one-shot --------
+    ratio = stream_peak / one_peak
+    assert ratio < 0.5, (
+        f"fig12: streamed peak {stream_peak}B is {ratio:.0%} of one-shot "
+        f"{one_peak}B — the O(chunk + certificate) claim failed")
+    out.append(csv_row("fig12/peak_live_bytes", 0.0,
+                       f"one_shot={one_peak / 2 ** 20:.3f}mb "
+                       f"streamed={stream_peak / 2 ** 20:.3f}mb "
+                       f"ratio_pct={100 * ratio:.1f}"))
+
+    # ---- pinned counters: the fixed ingest script above ----------------
+    ing = engine.snapshot()["ingest"]
+    out.append(csv_row(
+        "fig12/ingest_counters", 0.0,
+        f"chunks={ing['chunks']} folds={ing['folds']} "
+        f"spilled={ing['spilled']} replays={ing['replays']}"))
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"fig12: {retraces} retrace(s) after warmup — the chunk bucket "
+        f"failed to guarantee program reuse")
+    info = engine.snapshot()
+    out.append(csv_row(
+        "fig12/streaming_cache", 0.0,
+        f"programs={info['programs']} misses={info['misses']} "
+        f"traces={info['traces']} warm_retraces={retraces}"))
+    return out

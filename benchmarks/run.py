@@ -45,7 +45,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,fig6,fig7,fig8,"
-                         "fig9,fig10,fig11")
+                         "fig9,fig10,fig11,fig12")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes (CI sanity, not for comparison)")
     ap.add_argument("--json", dest="json_path", default=None, metavar="PATH",
@@ -62,6 +62,7 @@ def main() -> None:
     from benchmarks import (
         fig10_serving,
         fig11_failover,
+        fig12_streaming,
         fig2_machines,
         fig3_vertices,
         fig4_edges,
@@ -83,6 +84,7 @@ def main() -> None:
         "fig9": fig9_kernels.run,
         "fig10": fig10_serving.run,
         "fig11": fig11_failover.run,
+        "fig12": fig12_streaming.run,
     }
     if which and not which <= set(benches):
         ap.error(f"unknown figure(s) {sorted(which - set(benches))}; "

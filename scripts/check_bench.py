@@ -50,7 +50,11 @@ import sys
 #: so injected/recovered failures, the clean-vs-re-merge phase split, the
 #: recovery source (ckpt_used), and the checkpoint cadence's saves /
 #: restores are deterministic — a drift means machine loss stopped being
-#: detected, recovery ran twice, or the degraded-schedule re-merge grew)
+#: detected, recovery ran twice, or the degraded-schedule re-merge grew) +
+#: the streaming-ingest counters (fig12: the ingest script is fixed, so
+#: admitted chunks / certificate folds / spilled edges / ring replays are
+#: deterministic — a drift means the chunk split, the fold-per-certificate
+#: loop, or the lazy-materialization replay changed shape)
 EXACT_KEYS = ("programs", "misses", "traces",
               "sfs_rounds", "hybrid_rounds", "chain_rounds",
               "boruvka_rounds", "bytes_fused", "bytes_lax",
@@ -59,7 +63,8 @@ EXACT_KEYS = ("programs", "misses", "traces",
               "occupancy_x100", "warm_retraces",
               "kills", "injected", "recovered", "clean_phases",
               "remerge_phases", "restarts", "ckpt_used", "phases",
-              "saves", "restores")
+              "saves", "restores",
+              "chunks", "folds", "spilled", "replays")
 
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=(-?\d+)(?![\d.])")
 

@@ -46,6 +46,9 @@ python -m benchmarks.run --only fig10 --smoke --json BENCH_fig10_serving.json
 echo "== fig11: failover drills (kill -> recover -> re-merge parity) =="
 python -m benchmarks.run --only fig11 --smoke --json BENCH_fig11_failover.json
 
+echo "== fig12: streaming ingest (chunked vs one-shot peak live bytes) =="
+python -m benchmarks.run --only fig12 --smoke --json BENCH_fig12_streaming.json
+
 echo "== fig6 under the span tracer: stage rollup + span-count gate =="
 python -m benchmarks.run --only fig6 --smoke --trace \
     --json BENCH_ci_trace.json --trace-json BENCH_ci_trace_rollup.json
@@ -61,5 +64,7 @@ python scripts/check_bench.py --baseline BENCH_baseline_fig10.json \
     --current BENCH_fig10_serving.json
 python scripts/check_bench.py --baseline BENCH_baseline_fig11.json \
     --current BENCH_fig11_failover.json
+python scripts/check_bench.py --baseline BENCH_baseline_fig12.json \
+    --current BENCH_fig12_streaming.json
 
 echo "CI OK"

@@ -77,6 +77,32 @@ class Certificate:
     lazy: bool = False
     warm_merge: bool = False
 
+    def stream_load(self, chunks, capacity: int) -> tuple:
+        """Fold an iterable of edge chunks into one live state.
+
+        The streaming-ingest identity (DESIGN.md §Streaming ingest): the
+        chunks partition the edge multiset, certificate union is valid
+        over disjoint unions (§Fault tolerance's lemma), so
+        ``load_state(chunk0)`` then ``fold_state`` per remaining chunk
+        certifies exactly what one-shot ``load_state`` of the whole
+        buffer does — for EVERY registered certificate, with zero name
+        branches, because both hooks are the descriptor's own. Peak
+        device residency is one chunk plus the state. An empty iterable
+        yields the empty-graph state (all chunks must share ``n_nodes``;
+        pass one all-masked chunk for an edgeless world).
+        """
+        state = None
+        for chunk in chunks:
+            if state is None:
+                state = self.load_state(chunk, capacity)
+            else:
+                state = self.fold_state(state, chunk, capacity)
+        if state is None:
+            raise ValueError(
+                f"stream_load({self.name!r}): no chunks; stream at least "
+                "one (possibly all-masked) chunk to fix n_nodes")
+        return state
+
 
 _REGISTRY: dict[str, Certificate] = {}
 

@@ -49,6 +49,7 @@ from repro.core.certificate import certificate_capacity, sparse_certificate
 from repro.core.certs import get_certificate
 from repro.graph.datastructs import (
     INT,
+    ChunkedEdgeStream,
     EdgeList,
     compact_edges,
     concat_edges,
@@ -414,6 +415,58 @@ def simulate_churn_host(shards, ksrc, kdst, schedule: str = "paper",
                 certify(EdgeList(sh.src, sh.dst, m2, sh.n_nodes),
                         capacity=certificate_capacity(sh.n_nodes))))
     return simulate_merge_host(certs, schedule, certify=certify, grid=grid)
+
+
+def stream_shard_states(shards, chunk_edges: int, certificate: str = "2ec"):
+    """Per-shard STREAMED certificates: shard × chunk composition.
+
+    Each machine's edge shard flows through its own ``ChunkedEdgeStream``
+    and is folded chunk-by-chunk via the registry's ``stream_load`` — no
+    machine ever materializes its full shard buffer on device. Sound by
+    composing the two disjoint-union arguments (DESIGN.md §Streaming
+    ingest): within a shard the chunks partition the shard's edges, so
+    the streamed state certifies the shard; across shards the shards
+    partition the graph, so the usual merge phases apply unchanged.
+
+    Returns ``(certs, streams)``: the per-machine certificate pairs
+    (ready for ``simulate_merge_host`` / the shard_map phases) and the
+    per-machine streams (spill rings + chunk/fold counters).
+    """
+    desc = get_certificate(certificate)
+    certs, streams = [], []
+    tr = get_tracer()
+    for i, sh in enumerate(shards):
+        stream = ChunkedEdgeStream(sh.n_nodes, chunk_edges)
+        s, d = sh.to_numpy()
+        chunks = stream.admit(s, d)
+        if not chunks:  # edgeless shard: one all-masked chunk fixes n_nodes
+            chunks = [empty_certificate(sh.n_nodes, stream.chunk_bucket)]
+        cap = certificate_capacity(sh.n_nodes)
+        with tr.span("stage/ingest", machine=i, chunks=len(chunks),
+                     chunk_bucket=stream.chunk_bucket) as sp:
+            state = sp.sync(desc.stream_load(chunks, cap))
+        stream.folds += len(chunks)
+        certs.append(EdgeList(state[0], state[1], state[2], sh.n_nodes))
+        streams.append(stream)
+    return certs, streams
+
+
+def simulate_stream_merge_host(shards, chunk_edges: int,
+                               schedule: str = "paper",
+                               certificate: str = "2ec", grid=None):
+    """Host-side sharded streaming drill: every machine streams its own
+    chunk sequence (``stream_shard_states``), then the per-shard results
+    compose through the REAL merge schedule (``simulate_merge_host``) —
+    the multi-device variant of ``BridgeEngine.load_stream``. Returns
+    ``(merged_certs, streams)``; answering-machine convention as in
+    ``simulate_merge_host``.
+    """
+    desc = get_certificate(certificate)
+    certs, streams = stream_shard_states(shards, chunk_edges,
+                                         certificate=certificate)
+    merged = simulate_merge_host(certs, schedule, certify=desc.build,
+                                 grid=grid)
+    return merged, streams
 
 
 class _MemoryCertStore:

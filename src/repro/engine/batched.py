@@ -28,7 +28,7 @@ from repro.core.certificate import certificate_capacity
 from repro.graph.datastructs import (
     INT,
     EdgeList,
-    bucket_capacity,
+    admission_capacity,
     pad_edges,
     tombstone_mask,
 )
@@ -112,7 +112,7 @@ class BatchedEdgeList:
         keys = [empty if sd is None
                 else (np.asarray(sd[0], np.int32), np.asarray(sd[1], np.int32))
                 for sd in dels]
-        kcap = bucket_capacity(max((len(s) for s, _ in keys), default=1), 1)
+        kcap = admission_capacity(max((len(s) for s, _ in keys), default=1), 1)
         kel = BatchedEdgeList.from_graphs(keys, self.n_nodes, capacity=kcap,
                                           batch_pad=self.batch_size)
         mask, _ = _batched_tombstone(self.src, self.dst, self.mask,

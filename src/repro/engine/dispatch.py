@@ -24,7 +24,7 @@ from repro.core.certs import get_certificate
 from repro.engine.batched import make_analysis_fn, make_batched_pipeline
 from repro.graph.datastructs import (
     EdgeList,
-    bucket_capacity,
+    admission_capacity,
     compact_edges,
     concat_edges,
     tombstone_mask,
@@ -39,8 +39,8 @@ def admission_bucket(n_nodes: int, n_edges: int,
     admission currency: two requests with equal admission buckets are
     guaranteed to share one compiled program, so coalescing them can
     never retrace (``engine/scheduler.py``; DESIGN.md §Serving)."""
-    return (bucket_capacity(int(n_nodes), min_bucket),
-            bucket_capacity(max(int(n_edges), 1), min_bucket))
+    return (admission_capacity(int(n_nodes), min_bucket),
+            admission_capacity(max(int(n_edges), 1), min_bucket))
 
 
 class ProgramCache:

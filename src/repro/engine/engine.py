@@ -7,8 +7,8 @@ that into the three properties a query-serving deployment needs:
 
 * **compile-once** — jitted executables are cached in the engine keyed by
   ``(kind, n_nodes_bucket, capacity_bucket, backend, schedule)``. Inputs are
-  padded to power-of-two buckets (``graph.datastructs.bucket_capacity``), so
-  nearby graph sizes share one XLA program. ``stats`` counts cache hits,
+  padded to power-of-two buckets (``graph.datastructs.admission_capacity``),
+  so nearby graph sizes share one XLA program. ``stats`` counts cache hits,
   misses, and actual retraces so serving code can assert no-retrace.
 
 * **batched** — ``find_bridges_batch`` / ``analyze_batch`` pack B
@@ -29,6 +29,13 @@ that into the three properties a query-serving deployment needs:
   ``delete_edges`` serve edge churn from device-resident live state via
   the warm-start fold-in and the certificate-hit rebuild rule (DESIGN.md
   §Decremental) without ever re-running the full pipeline.
+
+* **streaming** — ``load_stream`` + ``ingest_chunk`` serve graphs whose
+  edge set does NOT fit one device: edges flow through fixed-size chunk
+  buffers folded straight into the live certificates, the full buffer is
+  never materialized, and peak device memory is O(chunk + certificate)
+  instead of O(E) (DESIGN.md §Streaming ingest). Deletions tombstone the
+  host spill ring and rebuild hit certificates by chunk replay.
 
 * **observable** — every device dispatch is wrapped in a tracer span
   named for its pipeline stage (``stage/certificate_build/...``,
@@ -86,7 +93,11 @@ from repro.engine.state import (
     live_state_tree,
     masked_arrays,
 )
-from repro.graph.datastructs import EdgeList, bucket_capacity
+from repro.graph.datastructs import (
+    ChunkedEdgeStream,
+    EdgeList,
+    admission_capacity,
+)
 from repro.obs import get_metrics, get_tracer
 
 __all__ = ["BridgeEngine", "EngineStats", "analyze_batch",
@@ -135,6 +146,7 @@ class BridgeEngine:
         self._scheduler = None  # lazy BridgeScheduler (see .scheduler)
         self._ckpt = None       # CheckpointPolicy (see enable_checkpoints)
         self._write_ops = 0     # applied write ops = checkpoint step clock
+        self._peak_live_bytes = 0  # high-water device bytes since load
 
     @property
     def _programs(self) -> dict:
@@ -206,6 +218,15 @@ class BridgeEngine:
             snap["rebuilds"] = rebuilds
             snap["rebuilds_total"] = sum(rebuilds.values())
             snap["live_graph_edges"] = self._live.count
+            snap["live_bytes"] = self._account_live_bytes()
+            snap["peak_live_bytes"] = self._peak_live_bytes
+            if self._live.stream is not None:
+                st = self._live.stream
+                snap["ingest"] = {
+                    "chunks": st.chunks_in, "folds": st.folds,
+                    "spilled": st.spilled_edges, "replays": st.replays,
+                    "chunk_bucket": st.chunk_bucket,
+                }
         if self._scheduler is not None:
             snap["scheduler"] = self._scheduler.snapshot()
         if self._ckpt is not None:
@@ -234,6 +255,11 @@ class BridgeEngine:
         self._write_ops += 1
         if self._ckpt is None or self._live is None:
             return
+        if self._live.full is None:
+            # streamed live state does not checkpoint: there is no full
+            # buffer to snapshot, and the host spill ring IS the recovery
+            # log (replay rebuilds everything)
+            return
         with get_tracer().span("engine/checkpoint_maybe",
                                step=self._write_ops):
             self._ckpt.on_write(self._write_ops,
@@ -246,6 +272,10 @@ class BridgeEngine:
                                "enable_checkpoints() first")
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
+        if self._live.full is None:
+            raise RuntimeError(
+                "streamed live state does not checkpoint: the spill ring "
+                "is the recovery log (re-ingest replays it)")
         with get_tracer().span("engine/checkpoint", step=self._write_ops):
             return self._ckpt.checkpoint(self._write_ops,
                                          live_state_tree(self._live))
@@ -323,7 +353,7 @@ class BridgeEngine:
         return self.scheduler.drain_all()
 
     def _bucket(self, m: int) -> int:
-        return bucket_capacity(m, self.min_bucket)
+        return admission_capacity(m, self.min_bucket)
 
     def _tick_trace(self):
         self.stats.traces += 1
@@ -463,7 +493,7 @@ class BridgeEngine:
                 n_bucket = self._bucket(max(ns))
                 cap = self._bucket(
                     max(max((len(s) for s, _ in graphs), default=1), 1))
-                b_bucket = bucket_capacity(len(graphs), 1)
+                b_bucket = admission_capacity(len(graphs), 1)
                 bel = BatchedEdgeList.from_graphs(graphs, n_bucket,
                                                   capacity=cap,
                                                   batch_pad=b_bucket)
@@ -560,17 +590,21 @@ class BridgeEngine:
 
     def _materialize(self, name: str) -> tuple:
         """Lazy certificates (``Certificate.lazy``, e.g. the scan-first and
-        hybrid pairs) are only computed — from the live full buffer — on
-        the FIRST query that resolves to them, so workloads that never ask
-        never pay their passes. Once live a state is maintained on device
-        per delta (and rebuilt from the full buffer when a deletion kills
-        one of its edges)."""
+        hybrid pairs) are only computed — from the live full buffer, or,
+        streamed, by spill-ring replay — on the FIRST query that resolves
+        to them, so workloads that never ask never pay their passes. Once
+        live a state is maintained on device per delta (and rebuilt when a
+        deletion kills one of its edges)."""
         live = self._live
         state = live.certs.get(name)
         if state is None:
-            state = live.certs[name] = self._cert_load(
-                name, live.n_bucket, live.full)
+            if live.full is None:
+                state = live.certs[name] = self._replay_state(name)
+            else:
+                state = live.certs[name] = self._cert_load(
+                    name, live.n_bucket, live.full)
             live.rebuilds.setdefault(name, 0)
+            self._account_live_bytes()
         return state
 
     def load(self, src, dst, n_nodes: int) -> "BridgeEngine":
@@ -593,12 +627,195 @@ class BridgeEngine:
             self._live = LiveState(
                 certs={}, rebuilds={}, full=(el.src, el.dst, el.mask),
                 count=len(src), n_nodes=int(n_nodes), n_bucket=n_bucket)
+            self._peak_live_bytes = 0
             for name in certificate_names():
                 if get_certificate(name).lazy:
                     self._live.certs[name] = None
                 else:
                     self._materialize(name)
+            self._account_live_bytes()
         return self
+
+    # --------------------------------------------------------------- streaming
+    def load_stream(self, src, dst, n_nodes: int, *,
+                    chunk_edges: int = 1024) -> "BridgeEngine":
+        """Set the engine's live graph WITHOUT materializing its edge
+        buffer: the streaming counterpart of ``load`` for graphs bigger
+        than one device (DESIGN.md §Streaming ingest).
+
+        The initial edges — and every later ``ingest_chunk`` delta — flow
+        through fixed ``chunk_edges``-sized device chunks folded straight
+        into the live certificate states via the registry's
+        ``load_state``/``fold_state`` programs, so peak device memory is
+        O(chunk + certificate) instead of O(E). A host-side spill ring
+        (``ChunkedEdgeStream``) keeps numpy copies of every chunk: it is
+        the tombstone target for ``delete_edges`` and the replay source
+        for certificate-hit rebuilds and lazy materialization. All chunk
+        buffers share ONE pow-2 ``chunk_bucket``, the same
+        ``admission_capacity`` currency as every other engine buffer, so
+        steady-state ingest reuses one compiled load/fold program per
+        certificate — zero retraces after warmup regardless of incoming
+        delta sizes. Checkpointing is not available in streamed mode (the
+        spill ring is itself the recovery log)."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "streaming ingest is single-device; shard with "
+                "core.merge.stream_shard_states and merge per-shard results")
+        with get_tracer().span("engine/load_stream", chunk_edges=chunk_edges):
+            n_bucket = self._bucket(n_nodes)
+            stream = ChunkedEdgeStream(n_nodes, chunk_edges,
+                                       minimum=self.min_bucket)
+            self._live = LiveState(
+                certs={name: None for name in certificate_names()},
+                rebuilds={}, full=None, count=0, n_nodes=int(n_nodes),
+                n_bucket=n_bucket, stream=stream)
+            self._peak_live_bytes = 0
+            self.ingest_chunk(src, dst)
+        return self
+
+    def ingest_chunk(self, src, dst, *, final: str = "device",
+                     kind: str | None = None, certificate: str | None = None):
+        """Stream an edge delta into the streamed live graph.
+
+        The delta is split into ``chunk_bucket``-padded device chunks
+        (``ChunkedEdgeStream.admit``, which also spills host copies into
+        the ring), and each chunk folds into every certificate the engine
+        currently tracks: eager certificates initialize from the first
+        chunk through the cached ``cert_load`` program and fold the rest
+        through the cached ``cert_insert`` program; lazy certificates stay
+        unmaterialized until the first query that resolves to them (then
+        replay the ring) — but once materialized they fold along like the
+        eager ones, staying current. ``mem/live_bytes`` is updated at
+        every chunk-fold boundary, which is what makes the O(chunk +
+        certificate) peak observable (fig12).
+
+        With ``kind=None`` (the default for raw ingest loops) returns the
+        engine; with a kind, returns that analysis of the updated live
+        graph — the scheduler's ``op='ingest_chunk'`` path."""
+        live = self._live
+        if live is None or live.stream is None:
+            raise RuntimeError(
+                "no streamed live graph: call load_stream() first")
+        tr = get_tracer()
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        with tr.span("stage/ingest", edges=len(src),
+                     chunk_bucket=live.stream.chunk_bucket):
+            for chunk in live.stream.admit(src, dst):
+                self._fold_chunk(chunk)
+                self._account_live_bytes()
+            live.count = live.stream.count
+        self._after_write()
+        if kind is None:
+            return self
+        return self.current_analysis(kind=kind, final=final,
+                                     certificate=certificate)
+
+    def _fold_chunk(self, chunk: EdgeList) -> None:
+        """Fold ONE admitted chunk into every tracked certificate state
+        (initialize eager / already-materialized ones from it if needed)."""
+        live = self._live
+        n_bucket = live.n_bucket
+        tr = get_tracer()
+        for name in list(live.certs):
+            state = live.certs[name]
+            if state is None:
+                if get_certificate(name).lazy:
+                    continue  # materializes by ring replay on first query
+                live.certs[name] = self._cert_load(
+                    name, n_bucket, (chunk.src, chunk.dst, chunk.mask))
+                live.rebuilds.setdefault(name, 0)
+            else:
+                key = ("cert_insert", name, n_bucket, chunk.capacity,
+                       self.backend, None)
+                fn = self._program(
+                    key, lambda name=name: build_cert_insert_program(
+                        name, n_bucket, self._tick_trace))
+                with tr.span(f"stage/merge/{name}",
+                             delta=chunk.capacity) as sp:
+                    live.certs[name] = tuple(sp.sync(
+                        fn(*state, chunk.src, chunk.dst, chunk.mask)))
+            live.stream.folds += 1
+
+    def _empty_chunk(self) -> EdgeList:
+        """All-masked chunk-bucket buffer: the streamed spelling of an
+        edgeless graph (fixes shapes so the cached programs still apply)."""
+        cb = self._live.stream.chunk_bucket
+        z = jnp.zeros((cb,), jnp.int32)
+        return EdgeList(z, z, jnp.zeros((cb,), bool), self._live.n_bucket)
+
+    def _replay_state(self, name: str) -> tuple:
+        """Rebuild ``name``'s live state by replaying the spill ring's
+        surviving chunks — the streamed rebuild source (tombstone-then-
+        replay, DESIGN.md §Streaming ingest). Replay chunks carry the same
+        ``chunk_bucket`` as ingest, so this reuses the cached programs."""
+        live = self._live
+        n_bucket = live.n_bucket
+        tr = get_tracer()
+        state = None
+        for chunk in live.stream.replay():
+            if state is None:
+                state = self._cert_load(
+                    name, n_bucket, (chunk.src, chunk.dst, chunk.mask))
+            else:
+                key = ("cert_insert", name, n_bucket, chunk.capacity,
+                       self.backend, None)
+                fn = self._program(
+                    key, lambda name=name: build_cert_insert_program(
+                        name, n_bucket, self._tick_trace))
+                with tr.span(f"stage/merge/{name}",
+                             delta=chunk.capacity) as sp:
+                    state = tuple(sp.sync(
+                        fn(*state, chunk.src, chunk.dst, chunk.mask)))
+            live.stream.folds += 1
+        if state is None:  # empty ring: certify the edgeless world
+            ec = self._empty_chunk()
+            state = self._cert_load(name, n_bucket, (ec.src, ec.dst, ec.mask))
+            live.stream.folds += 1
+        return state
+
+    # ---------------------------------------------------------- memory gauges
+    def _account_live_bytes(self) -> int:
+        """Device bytes of the live state — certificate states plus the
+        edge buffer (full, or one streamed chunk) — published to the
+        ``mem/live_bytes`` / ``mem/peak_live_bytes`` gauges. Called at
+        load and at every chunk-fold / churn boundary, so the gauges trace
+        the O(chunk + certificate) claim fig12 pins (peak resets on
+        ``load``/``load_stream``)."""
+        live = self._live
+        if live is None:
+            return 0
+        total = 0
+        for state in live.certs.values():
+            if state is None:
+                continue
+            for x in state:
+                total += x.size * x.dtype.itemsize
+        if live.full is not None:
+            for x in live.full:
+                total += x.size * x.dtype.itemsize
+        else:
+            total += live.stream.device_chunk_bytes
+        m = get_metrics()
+        m.gauge("mem/live_bytes").set(total)
+        if total > self._peak_live_bytes:
+            self._peak_live_bytes = total
+        m.gauge("mem/peak_live_bytes").set(self._peak_live_bytes)
+        return total
+
+    @property
+    def live_bytes(self) -> int:
+        """Current device bytes of the live state (see
+        ``_account_live_bytes``)."""
+        return self._account_live_bytes()
+
+    @property
+    def peak_live_bytes(self) -> int:
+        """High-water ``live_bytes`` since the last ``load``/``load_stream``
+        — the number fig12 compares across the one-shot and streamed
+        paths."""
+        self._account_live_bytes()
+        return self._peak_live_bytes
 
     @property
     def num_live_edges(self) -> int:
@@ -607,7 +824,7 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         return int(np.asarray(
-            self._live.certs[primary_certificate()][2]).sum())
+            self._materialize(primary_certificate())[2]).sum())
 
     @property
     def num_live_graph_edges(self) -> int:
@@ -650,6 +867,11 @@ class BridgeEngine:
         if self._live is None:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
+        if live.full is None:
+            # streamed live graph: an insert IS an ingest (chunk currency
+            # instead of per-delta buckets; the ring records the delta)
+            return self.ingest_chunk(src, dst, final=final, kind=kind,
+                                     certificate=certificate)
         n_bucket = live.n_bucket
         tr = get_tracer()
         with tr.span("engine/insert_edges", kind=kind):
@@ -677,7 +899,7 @@ class BridgeEngine:
             fs, fd, fm = live.full
             needed = live.count + len(src)
             out_cap = (fs.shape[0] if needed <= fs.shape[0]
-                       else bucket_capacity(needed, self.min_bucket))
+                       else admission_capacity(needed, self.min_bucket))
             akey = ("append", n_bucket, fs.shape[0], delta_cap, out_cap,
                     self.backend)
             afn = self._program(
@@ -736,16 +958,24 @@ class BridgeEngine:
             raise RuntimeError("no live graph: call load() first")
         live = self._live
         n_bucket = live.n_bucket
-        with get_tracer().span("engine/delete_edges", kind=kind):
+        with get_tracer().span("engine/delete_edges", kind=kind,
+                               streamed=live.full is None):
             src = np.asarray(src, np.int32)
             dst = np.asarray(dst, np.int32)
             kcap = self._bucket(max(len(src), 1))
             keys = EdgeList.from_arrays(src, dst, n_bucket, capacity=kcap)
 
-            fs, fd, fm = live.full
-            fm, removed = self._delete_pass((fs, fd, fm), keys, "full")
-            live.full = (fs, fd, fm)
-            live.count -= int(removed)
+            if live.full is None:
+                # streamed: tombstone the host spill ring (the edge-set
+                # record), probe the device certificate states as usual,
+                # rebuild hits by ring replay instead of a full-buffer load
+                removed = live.stream.tombstone(src, dst)
+                live.count = live.stream.count
+            else:
+                fs, fd, fm = live.full
+                fm, removed = self._delete_pass((fs, fd, fm), keys, "full")
+                live.full = (fs, fd, fm)
+                live.count -= int(removed)
 
             for name, state in live.certs.items():
                 if state is None:
@@ -753,8 +983,11 @@ class BridgeEngine:
                 _, hits = self._delete_pass(state[:3], keys, name)
                 if int(hits):
                     live.rebuilds[name] += 1
-                    live.certs[name] = self._cert_load(name, n_bucket,
-                                                       live.full)
+                    live.certs[name] = (self._replay_state(name)
+                                        if live.full is None else
+                                        self._cert_load(name, n_bucket,
+                                                        live.full))
+            self._account_live_bytes()
             self._after_write()
             return self.current_analysis(kind=kind, final=final,
                                          certificate=certificate)

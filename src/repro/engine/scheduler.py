@@ -61,15 +61,17 @@ from typing import Any
 from repro.engine.batched import normalize_kind
 from repro.engine.dispatch import admission_bucket
 from repro.engine.state import SchedStats
-from repro.graph.datastructs import bucket_capacity
+from repro.graph.datastructs import admission_capacity
 from repro.obs import MetricsRegistry, get_metrics, get_tracer
 from repro.runtime.watchdog import StepWatchdog
 
 __all__ = ["BridgeScheduler", "Ticket"]
 
-#: request operations: one read (coalescable) + the two live-state writes
+#: request operations: one read (coalescable) + the live-state writes
+#: (``ingest_chunk`` is the streamed-mode insert — chunked edge arrivals
+#: admitted between read waves like any other write)
 READ_OPS = ("analyze",)
-WRITE_OPS = ("insert_edges", "delete_edges")
+WRITE_OPS = ("insert_edges", "delete_edges", "ingest_chunk")
 
 
 @dataclasses.dataclass
@@ -231,7 +233,7 @@ class BridgeScheduler:
                         tr) -> None:
         """ONE coalesced vmapped dispatch for a same-bucket chunk."""
         kind, final, certificate = bucket[0], bucket[1], bucket[2]
-        b_bucket = bucket_capacity(len(chunk), 1)
+        b_bucket = admission_capacity(len(chunk), 1)
         self.stats.dispatches += 1
         self.stats.coalesced += len(chunk)
         self.stats.padded_slots += b_bucket - len(chunk)
@@ -292,7 +294,7 @@ class BridgeScheduler:
                 if chunk:
                     self._dispatch_reads(bucket, chunk, tr)
                     wave_queries += len(chunk)
-                    wave_slots += bucket_capacity(len(chunk), 1)
+                    wave_slots += admission_capacity(len(chunk), 1)
             writes, self._writes = self._writes, []
             if writes:
                 self._apply_writes(writes, tr)

@@ -94,17 +94,23 @@ class LiveState:
     rebuilds : per-certificate certificate-hit rebuild counters, one entry
                per MATERIALIZED certificate (DESIGN.md §Decremental)
     full     : the device-resident (src, dst, mask) full edge buffer — the
-               tombstone target and decremental rebuild source
+               tombstone target and decremental rebuild source; ``None``
+               in STREAMED mode (``BridgeEngine.load_stream``), where the
+               ``stream``'s spill ring takes over both roles
     count    : live edge count (inserts minus deletions), host-tracked so
                bucket-growth is a static shape decision with no device sync
+    stream   : the ``graph.datastructs.ChunkedEdgeStream`` behind a
+               streamed live graph (chunk buffers + host spill ring +
+               ingest counters); ``None`` for one-shot ``load``
     """
 
     certs: dict
     rebuilds: dict
-    full: tuple
+    full: tuple | None
     count: int
     n_nodes: int
     n_bucket: int
+    stream: object = None
 
     def __getitem__(self, key: str):
         # dict-style access kept for the pre-split ``engine._live["..."]``
@@ -127,7 +133,13 @@ def live_state_tree(live: LiveState) -> dict:
     are simply absent — they re-materialize from the restored full buffer
     on first query, exactly like after ``load``), ``rebuilds/<name>`` and
     ``meta/*`` as 0-d scalars. ``live_state_from_flat`` is the inverse.
+    Streamed live states (``full is None``) do not checkpoint — the host
+    spill ring is their recovery log (DESIGN.md §Streaming ingest).
     """
+    if live.full is None:
+        raise ValueError(
+            "streamed live state has no full buffer to checkpoint; replay "
+            "the spill ring instead (ChunkedEdgeStream)")
     return {
         "full": list(live.full),
         "certs": {name: list(state)

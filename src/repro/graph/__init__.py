@@ -1,10 +1,12 @@
 from repro.graph import generators
 from repro.graph.datastructs import (
+    ChunkedEdgeStream,
     EdgeList,
+    admission_capacity,
     bucket_capacity,
     compact_edges,
     pad_edges,
 )
 
-__all__ = ["EdgeList", "bucket_capacity", "compact_edges", "pad_edges",
-           "generators"]
+__all__ = ["ChunkedEdgeStream", "EdgeList", "admission_capacity",
+           "bucket_capacity", "compact_edges", "pad_edges", "generators"]

@@ -88,16 +88,23 @@ def pad_edges(edges: EdgeList, capacity: int) -> EdgeList:
     return compact_edges(edges, capacity)
 
 
-def bucket_capacity(m: int, minimum: int = 16) -> int:
-    """Smallest power of two >= max(m, minimum).
+def admission_capacity(m: int, minimum: int = 16) -> int:
+    """Smallest power of two >= max(m, minimum) — THE shared bucket helper.
 
     The shape-bucketing contract of the BridgeEngine (see repro.engine):
     every host-facing buffer is padded to a power-of-two slot count so nearby
     graph sizes share one traced/compiled XLA program instead of recompiling
-    per exact edge count.
+    per exact edge count. Engine admission (``dispatch.admission_bucket``),
+    scheduler coalescing, batched deletion-key buffers, and streaming chunk
+    buckets (``ChunkedEdgeStream``) all size through this one function, so
+    the buckets that make up a ``ProgramCache`` key can never drift apart.
     """
     m = max(int(m), minimum, 1)
     return 1 << (m - 1).bit_length()
+
+
+#: pre-PR-10 spelling, kept for external callers; same function by contract
+bucket_capacity = admission_capacity
 
 
 def compact_edges(edges: EdgeList, capacity: int, keep: jax.Array | None = None) -> EdgeList:
@@ -144,6 +151,123 @@ def concat_edges(a: EdgeList, b: EdgeList) -> EdgeList:
         jnp.concatenate([a.mask, b.mask]),
         a.n_nodes,
     )
+
+
+class ChunkedEdgeStream:
+    """Streaming-ingest buffers: pow-2 device chunks + a host spill ring.
+
+    The streaming counterpart of the one-shot full buffer (DESIGN.md
+    §Streaming ingest): edges flow through fixed-size device-resident
+    chunks and are folded into the live certificates chunk by chunk, so
+    peak DEVICE memory is O(chunk + certificate) instead of O(E). Three
+    pieces:
+
+    * ``admit(src, dst)`` splits an arbitrary-size edge delta into
+      segments of at most ``chunk_bucket`` edges, each padded to exactly
+      ``chunk_bucket`` slots (``admission_capacity`` — the same pow-2
+      currency as every other engine buffer), so every chunk of every
+      ingest reuses ONE compiled load/fold program per certificate:
+      steady-state ingest is zero-retrace regardless of incoming sizes.
+
+    * the **spill ring**: a host-side (numpy, not device) copy of every
+      admitted segment. Host memory stays O(E) — the claim is about
+      device memory — and the ring is the replay source whenever a live
+      certificate must be rebuilt from scratch (a deletion killed one of
+      its edges) and there is no full device buffer to rebuild from.
+
+    * ``tombstone(ksrc, kdst)`` removes every ring copy of the keyed
+      unordered endpoint pairs (the host mirror of
+      ``tombstone_mask``) and re-chunks the survivors into full
+      segments, so ``replay()`` stays bounded at ceil(count/chunk)
+      chunks no matter how fragmented churn made the ring.
+
+    Counters (``chunks_in``/``folds``/``spilled_edges``/``replays``) are
+    deterministic for a fixed ingest sequence; fig12 pins them exactly.
+    """
+
+    def __init__(self, n_nodes: int, chunk_edges: int = 1024,
+                 minimum: int = 16):
+        self.n_nodes = int(n_nodes)
+        self.chunk_bucket = admission_capacity(chunk_edges, minimum)
+        self._ring: list[tuple[np.ndarray, np.ndarray]] = []
+        self.count = 0          # live edges (spilled minus tombstoned)
+        self.chunks_in = 0      # device chunks admitted
+        self.folds = 0          # certificate-state load/fold dispatches
+        self.spilled_edges = 0  # edges appended to the host ring
+        self.replays = 0        # full ring replays (rebuilds)
+
+    @property
+    def device_chunk_bytes(self) -> int:
+        """Device bytes of ONE chunk buffer: int32 src + int32 dst + bool
+        mask — the streaming path's whole edge-buffer footprint."""
+        return self.chunk_bucket * (4 + 4 + 1)
+
+    @property
+    def ring_segments(self) -> int:
+        return len(self._ring)
+
+    def admit(self, src, dst) -> list[EdgeList]:
+        """Split a delta into chunk-bucket-padded device chunks and spill
+        host copies into the ring. Returns the chunks in ingest order."""
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        if src.shape != dst.shape:
+            raise ValueError(
+                f"admit: src/dst length mismatch {src.shape} vs {dst.shape}")
+        chunks = []
+        for lo in range(0, max(len(src), 1), self.chunk_bucket):
+            s = src[lo:lo + self.chunk_bucket]
+            d = dst[lo:lo + self.chunk_bucket]
+            if len(s) == 0:
+                break
+            self._ring.append((s.copy(), d.copy()))
+            self.spilled_edges += len(s)
+            self.count += len(s)
+            self.chunks_in += 1
+            chunks.append(EdgeList.from_arrays(s, d, self.n_nodes,
+                                               capacity=self.chunk_bucket))
+        return chunks
+
+    def tombstone(self, ksrc, kdst) -> int:
+        """Remove every ring copy of the keyed unordered pairs; returns
+        the number of edges removed. Survivors are re-chunked into full
+        segments so replay cost stays ceil(count/chunk)."""
+        ks = np.asarray(ksrc, np.int32)
+        kd = np.asarray(kdst, np.int32)
+        kset = set(zip(np.minimum(ks, kd).tolist(),
+                       np.maximum(ks, kd).tolist()))
+        if not kset or not self._ring:
+            return 0
+        all_s = np.concatenate([s for s, _ in self._ring])
+        all_d = np.concatenate([d for _, d in self._ring])
+        lo, hi = np.minimum(all_s, all_d), np.maximum(all_s, all_d)
+        keep = np.fromiter(((a, b) not in kset
+                            for a, b in zip(lo.tolist(), hi.tolist())),
+                           bool, count=len(all_s))
+        removed = int((~keep).sum())
+        if removed:
+            all_s, all_d = all_s[keep], all_d[keep]
+            self._ring = [
+                (all_s[i:i + self.chunk_bucket], all_d[i:i + self.chunk_bucket])
+                for i in range(0, len(all_s), self.chunk_bucket)]
+            self.count -= removed
+        return removed
+
+    def replay(self):
+        """Iterate the surviving ring as chunk-bucket-padded ``EdgeList``s
+        — the decremental-rebuild source (same chunk currency as
+        ``admit``, so the replay reuses the ingest programs)."""
+        self.replays += 1
+        for s, d in self._ring:
+            yield EdgeList.from_arrays(s, d, self.n_nodes,
+                                       capacity=self.chunk_bucket)
+
+    def to_numpy(self):
+        """Host copy of every live edge: (src, dst)."""
+        if not self._ring:
+            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+        return (np.concatenate([s for s, _ in self._ring]),
+                np.concatenate([d for _, d in self._ring]))
 
 
 def build_csr(src: np.ndarray, dst: np.ndarray, n_nodes: int):

@@ -49,7 +49,7 @@ from repro.core.certificate import certificate_capacity, sparse_certificate
 from repro.core.merge import empty_certificate, merge_phase_plan
 from repro.core.partition import partition_edges
 from repro.graph import generators as gen
-from repro.graph.datastructs import EdgeList, bucket_capacity, concat_edges
+from repro.graph.datastructs import EdgeList, admission_capacity, concat_edges
 from repro.obs import get_metrics, get_tracer
 from repro.runtime.failures import FailureInjector
 from repro.runtime.watchdog import HeartbeatMonitor
@@ -144,7 +144,7 @@ def serve_failover(args) -> dict:
                                            seed=args.seed)
     ps, pd, pm = partition_edges(src, dst, args.n, m, seed=args.seed)
     shards = [(ps[i][pm[i]], pd[i][pm[i]]) for i in range(m)]
-    shard_cap = bucket_capacity(
+    shard_cap = admission_capacity(
         2 * max(len(s) for s, _ in shards)
         + (steps + 2) * args.delta_edges + 16)
     fleet = _Fleet(shards, args.n, shard_cap)

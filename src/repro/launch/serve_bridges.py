@@ -28,6 +28,16 @@ plus a per-stage rollup; ``--profile-dir DIR`` additionally captures a
 ``jax.profiler`` device trace whose ``named_scope`` labels line up with
 the span names.
 
+``--workload ingest`` is the streaming-ingest drill (DESIGN.md §Streaming
+ingest): the same dense world is loaded twice — one-shot (``load``, full
+edge buffer resident) and streamed (``load_stream`` + ``ingest_chunk``
+arrivals flowing through fixed ``--chunk-edges`` device chunks) — and the
+report compares ingest throughput (edges/s), peak live device bytes
+(``mem/peak_live_bytes``: the streamed path holds O(chunk + certificate)
+instead of O(E)), and asserts bit-identical analyses for every registry
+kind plus zero retraces after warmup (chunk buckets are ProgramCache
+currency).
+
 ``--workload churn`` makes the incremental phase interleave link FAILURES
 (``delete_edges``, at ``--delete-ratio``) with the inserts — the paper's
 serving story end to end; the report then also carries the deletion count
@@ -75,7 +85,7 @@ from repro.connectivity.registry import analysis_kinds, get_analysis
 from repro.core.certs import certificate_names
 from repro.engine import BridgeEngine, BridgeScheduler
 from repro.graph import generators as gen
-from repro.graph.datastructs import bucket_capacity
+from repro.graph.datastructs import admission_capacity
 from repro.kernels.boruvka_round import kernel_path
 from repro.obs import MetricsRegistry, profiler_trace
 
@@ -418,7 +428,7 @@ def serve_multitenant(engine: BridgeEngine, kinds, args,
     s0, d0, n0 = reads[0]
     engine.load(s0, d0, n0)
     n_writes = args.deltas if churn is not None else 0
-    headroom = bucket_capacity(len(s0)) - len(s0)
+    headroom = admission_capacity(len(s0)) - len(s0)
     delta_edges = max(1, min(args.delta_edges,
                              headroom // max(2 * n_writes + 2, 1)))
     write_streams = {
@@ -576,6 +586,86 @@ def serve_multitenant(engine: BridgeEngine, kinds, args,
     return report
 
 
+def serve_ingest(engine: BridgeEngine, args, metrics: MetricsRegistry) -> dict:
+    """The streaming-ingest drill: one dense world served twice.
+
+    ONE-SHOT: ``load`` materializes the full edge buffer on device and
+    certifies it (peak device memory O(E)). STREAMED: the same edges
+    arrive as deltas through ``load_stream``/``ingest_chunk`` and fold
+    into the live certificates through fixed ``--chunk-edges`` chunks
+    (peak O(chunk + certificate); the host spill ring keeps the edge-set
+    record). The drill then asserts bit-identical analyses for EVERY
+    registry kind, zero retraces across the post-warmup ingest (the chunk
+    bucket is ProgramCache currency), and reports edges/s + the two
+    ``peak_live_bytes`` high-water marks whose ratio fig12 pins.
+    """
+    n = args.n
+    src, dst = gen.random_graph(n, args.edges, seed=args.seed)
+    kinds = [get_analysis(k).kind for k in analysis_kinds()]
+
+    # ---- one-shot reference: full buffer resident -----------------------
+    one = BridgeEngine(certificate=args.certificate)
+    t0 = time.perf_counter()
+    one.load(src, dst, n)
+    t_load = time.perf_counter() - t0
+    ref = {k: one.current_analysis(kind=k) for k in kinds}
+    one_peak = one.peak_live_bytes
+
+    # ---- warmup: compile the chunk-bucket load/fold + final programs ----
+    warm_edges = min(len(src), 2 * args.chunk_edges)
+    engine.load_stream(src[:warm_edges], dst[:warm_edges], n,
+                       chunk_edges=args.chunk_edges)
+    for k in kinds:
+        engine.current_analysis(kind=k)
+    warm_traces = engine.stats.traces
+
+    # ---- timed streamed ingest: fresh stream, warm programs -------------
+    hist = metrics.histogram("ingest/chunk_s")
+    t0 = time.perf_counter()
+    engine.load_stream(src[:0], dst[:0], n, chunk_edges=args.chunk_edges)
+    step = max(2 * args.chunk_edges, 1)  # arrivals bigger than one chunk
+    for lo in range(0, len(src), step):
+        t1 = time.perf_counter()
+        engine.ingest_chunk(src[lo:lo + step], dst[lo:lo + step])
+        hist.observe(time.perf_counter() - t1)
+    t_ingest = time.perf_counter() - t0
+    got = {k: engine.current_analysis(kind=k) for k in kinds}
+    for k in kinds:
+        assert _same(k, got[k], ref[k]), f"ingest parity: {k} mismatch"
+    if args.verify:
+        want = get_analysis("bridges").host_fn(src, dst, n)
+        assert _same("bridges", got["bridges"], want), "ingest host mismatch"
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"{retraces} retrace(s) during warm streamed ingest — the chunk "
+        f"bucket stopped being ProgramCache currency")
+
+    snap = engine.snapshot()
+    streamed_peak = engine.peak_live_bytes
+    eps = len(src) / max(t_ingest, 1e-9)
+    report = {
+        "edges": len(src), "n": n, "chunk_edges": args.chunk_edges,
+        "chunk_bucket": snap["ingest"]["chunk_bucket"],
+        "one_shot": {"load_s": t_load, "peak_live_bytes": one_peak},
+        "streamed": {"ingest_s": t_ingest, "edges_per_s": eps,
+                     "peak_live_bytes": streamed_peak,
+                     **snap["ingest"]},
+        "peak_bytes_ratio": streamed_peak / max(one_peak, 1),
+        "parity_kinds": kinds,
+        "warm_retraces": retraces,
+        "latency": {"chunk": hist.snapshot()},
+    }
+    print(f"[ingest] {len(src)} edges via {snap['ingest']['chunks']} chunks "
+          f"(bucket {report['chunk_bucket']}) | {eps:,.0f} edges/s | "
+          f"folds {snap['ingest']['folds']} replays "
+          f"{snap['ingest']['replays']}", flush=True)
+    print(f"[ingest] peak live bytes: streamed {streamed_peak:,} vs "
+          f"one-shot {one_peak:,} ({report['peak_bytes_ratio']:.0%}) | "
+          f"parity {len(kinds)} kinds OK | warm retraces {retraces}",
+          flush=True)
+    return report
+
+
 def _p99_spread(per_tenant: dict) -> float | None:
     """max/min ratio of per-tenant p99 latency (1.0 = perfectly even)."""
     p99s = [row["latency"]["p99"] for row in per_tenant.values()
@@ -596,15 +686,23 @@ def main(argv=None):
                     help="incremental updates served after the batched phase")
     ap.add_argument("--delta-edges", type=int, default=64)
     ap.add_argument("--workload",
-                    choices=["insert", "churn", "multitenant", "failover"],
+                    choices=["insert", "churn", "multitenant", "failover",
+                             "ingest"],
                     default="insert",
                     help="incremental phase: insert-only, churn with "
                          "interleaved link failures (delete_edges), the "
                          "multitenant continuous-batching request path "
-                         "(scheduler vs sequential loop), or the "
+                         "(scheduler vs sequential loop), the "
                          "failover drill (kill a machine mid-serve, watchdog "
                          "detection, checkpoint/recertify recovery — "
-                         "DESIGN.md §Fault tolerance)")
+                         "DESIGN.md §Fault tolerance), or the streaming-"
+                         "ingest drill (one-shot load vs chunked "
+                         "load_stream: edges/s + peak live bytes — "
+                         "DESIGN.md §Streaming ingest)")
+    ap.add_argument("--chunk-edges", type=int, default=1024,
+                    help="ingest workload: edges per device chunk (rounded "
+                         "up to a pow-2 chunk bucket, the ProgramCache "
+                         "currency)")
     ap.add_argument("--machines", type=int, default=4,
                     help="failover workload: serving fleet size")
     ap.add_argument("--steps", type=int, default=12,
@@ -670,6 +768,11 @@ def main(argv=None):
         args.delta_edges = min(args.delta_edges, 16)
         if args.workload == "multitenant":
             args.queries = min(args.queries, 6)
+        if args.workload == "ingest":
+            # a still-dense smoke world: full buffer >> certificates, so
+            # the streamed-vs-one-shot byte ratio stays meaningful
+            args.edges = min(max(args.edges, 4096), 4096)
+            args.chunk_edges = min(args.chunk_edges, 128)
     if args.workload == "failover":
         if args.kill_machine is not None and args.kill_at_step is None:
             args.kill_at_step = args.steps // 3
@@ -682,12 +785,15 @@ def main(argv=None):
     tracer = obs.enable_tracing() if args.trace_out else None
     multitenant = None
     failover = None
+    ingest = None
     per_kind: list = []
     try:
         with profiler_trace(args.profile_dir):
             if args.workload == "failover":
                 from repro.launch.failover import serve_failover
                 failover = serve_failover(args)
+            elif args.workload == "ingest":
+                ingest = serve_ingest(engine, args, metrics)
             elif args.workload == "multitenant":
                 multitenant = serve_multitenant(engine, kinds, args, metrics)
             else:
@@ -731,6 +837,8 @@ def main(argv=None):
         report["multitenant"] = multitenant
     if failover is not None:
         report["failover"] = failover
+    if ingest is not None:
+        report["ingest"] = ingest
     if tracer is not None:
         tracer.write_chrome_trace(args.trace_out)
         stages = tracer.stage_rollup()

@@ -1,0 +1,322 @@
+"""Streaming chunked ingest (DESIGN.md §Streaming ingest): the
+``ChunkedEdgeStream`` buffers, the registry-driven ``stream_load``
+identity, engine streamed serving (``load_stream``/``ingest_chunk``)
+against the one-shot ``load`` path for every analysis kind × every valid
+certificate, chunk-size invariance, zero-retrace steady state, streamed
+churn (interleaved ingest + delete) against host recomputation, the
+sharded shard×chunk composition, and the streamed-mode checkpoint
+refusal.
+
+Shapes are pinned to one bucket family (n=48 -> n_bucket 64, base edges
+-> cap 256, chunks -> bucket 16 except where chunk-size invariance is the
+point) and one module-level engine is shared, so the whole module
+compiles each program once (1-core CI box).
+"""
+import numpy as np
+import pytest
+
+from repro.connectivity.registry import ANALYSIS_KINDS, get_analysis
+from repro.core.certificate import certificate_capacity
+from repro.core.certs import certificate_names, get_certificate
+from repro.core.merge import simulate_merge_host, simulate_stream_merge_host
+from repro.core.partition import partition_edges
+from repro.engine import BridgeEngine
+from repro.engine.state import live_state_tree
+from repro.graph import generators as gen
+from repro.graph.datastructs import (
+    ChunkedEdgeStream,
+    EdgeList,
+    admission_capacity,
+    bucket_capacity,
+)
+from repro.obs import get_metrics
+
+from _hyp import given, st
+
+N, E0 = 48, 150          # n_bucket 64, one-shot full-buffer bucket 256
+CHUNK = 16               # streaming chunk bucket shared by the module
+
+ENGINE = BridgeEngine()
+
+
+# ------------------------------------------------------------------ helpers
+def _same(kind, got, want):
+    if get_analysis(kind).kind == "2ecc":
+        return np.array_equal(np.asarray(got), np.asarray(want))
+    return got == want
+
+
+def _host(kind, s, d, n):
+    return get_analysis(kind).host_fn(np.asarray(s, np.int32),
+                                      np.asarray(d, np.int32), n)
+
+
+def _worlds():
+    """sparse / path / barbell worlds, all inside the (64, 256) buckets."""
+    p = np.arange(N - 1, dtype=np.int32)
+    bs, bd, _, bn = gen.barbell(6, 8)
+    assert bn <= N
+    return [
+        ("sparse", *gen.random_graph(N, E0, seed=3)),
+        ("path", p, p + 1),
+        ("barbell", bs, bd),
+    ]
+
+
+def _valid_certs(kind):
+    """Certificate overrides the engine accepts for ``kind`` (always
+    includes ``None`` — the kind's registered default)."""
+    analysis = get_analysis(kind)
+    out = [None]
+    for name in certificate_names():
+        try:
+            ENGINE._resolve_certificate(analysis, name)
+        except ValueError:
+            continue
+        out.append(name)
+    return out
+
+
+# ------------------------------------------------- shared capacity helper
+def test_admission_capacity_is_the_shared_bucket_helper():
+    # one pow-2 helper everywhere; the old name stays as an alias
+    assert bucket_capacity is admission_capacity
+    assert admission_capacity(1) == 16
+    assert admission_capacity(16) == 16
+    assert admission_capacity(17) == 32
+    assert admission_capacity(500) == 512
+    assert admission_capacity(3, minimum=1) == 4
+
+
+# ------------------------------------------------------ ChunkedEdgeStream
+def test_stream_admit_splits_and_pads_to_one_bucket():
+    st_ = ChunkedEdgeStream(N, chunk_edges=CHUNK)
+    assert st_.chunk_bucket == CHUNK
+    assert st_.device_chunk_bytes == CHUNK * 9  # int32+int32+bool per slot
+    s, d = gen.random_graph(N, 40, seed=0)
+    chunks = st_.admit(s, d)
+    assert [c.capacity for c in chunks] == [CHUNK, CHUNK, CHUNK]
+    assert [int(np.asarray(c.mask).sum()) for c in chunks] == [16, 16, 8]
+    assert (st_.count, st_.chunks_in, st_.spilled_edges) == (40, 3, 40)
+    assert st_.admit(s[:0], d[:0]) == []  # empty delta admits nothing
+    assert st_.chunks_in == 3
+    rs, rd = st_.to_numpy()
+    assert np.array_equal(rs, s) and np.array_equal(rd, d)
+
+
+def test_stream_tombstone_rechunks_and_bounds_replay():
+    st_ = ChunkedEdgeStream(N, chunk_edges=CHUNK)
+    s, d = gen.random_graph(N, 40, seed=1)
+    st_.admit(s, d)
+    # key the first 6 pairs in REVERSED orientation: unordered match
+    removed = st_.tombstone(d[:6], s[:6])
+    kset = set(zip(np.minimum(s[:6], d[:6]).tolist(),
+                   np.maximum(s[:6], d[:6]).tolist()))
+    want_gone = sum((min(a, b), max(a, b)) in kset for a, b in zip(s, d))
+    assert removed == want_gone
+    assert st_.count == 40 - removed
+    # survivors re-chunked into full segments: replay stays bounded
+    assert st_.ring_segments == -(-st_.count // CHUNK)
+    live = 0
+    for c in st_.replay():
+        assert c.capacity == CHUNK
+        live += int(np.asarray(c.mask).sum())
+    assert live == st_.count
+    assert st_.replays == 1
+    # no-op keys remove nothing and leave the ring alone
+    assert st_.tombstone(d[:6], s[:6]) == 0
+    assert st_.count == 40 - removed
+
+
+def test_stream_admit_length_mismatch_raises():
+    st_ = ChunkedEdgeStream(N, chunk_edges=CHUNK)
+    with pytest.raises(ValueError, match="mismatch"):
+        st_.admit(np.zeros(3, np.int32), np.zeros(2, np.int32))
+
+
+# ------------------------------------------------ stream_load ≡ one-shot
+@pytest.mark.parametrize("kind", ANALYSIS_KINDS)
+def test_stream_load_certifies_like_one_shot(kind):
+    """Registry identity: folding chunk-by-chunk certifies exactly what
+    the one-shot build does, for every certificate valid for the kind —
+    parity on ANALYSES (certificate edge sets may legitimately differ)."""
+    cap = certificate_capacity(N)
+    for cname in _valid_certs(kind):
+        desc = get_certificate(cname or ENGINE.certificate_for(kind))
+        for wname, s, d in _worlds():
+            want = _host(kind, s, d, N)
+            stream = ChunkedEdgeStream(N, chunk_edges=CHUNK)
+            state = desc.stream_load(stream.admit(s, d), cap)
+            pair = EdgeList(state[0], state[1], state[2], N)
+            cs, cd = pair.to_numpy()
+            assert len(cs) <= cap, (wname, desc.name)
+            assert _same(kind, _host(kind, cs, cd, N), want), \
+                (wname, desc.name)
+
+
+def test_stream_load_requires_at_least_one_chunk():
+    with pytest.raises(ValueError, match="at least one"):
+        get_certificate("2ec").stream_load([], certificate_capacity(N))
+
+
+# ------------------------------------------- engine streamed ≡ one-shot
+@pytest.mark.parametrize("kind", ANALYSIS_KINDS)
+def test_engine_streamed_parity_every_kind(kind):
+    """``load_stream`` serves bit-identical analyses to ``load`` for
+    every valid certificate on every world — the tentpole identity."""
+    for wname, s, d in _worlds():
+        ENGINE.load(s, d, N)
+        want = {c: ENGINE.current_analysis(kind, certificate=c)
+                for c in _valid_certs(kind)}
+        ENGINE.load_stream(s, d, N, chunk_edges=CHUNK)
+        for c, w in want.items():
+            got = ENGINE.current_analysis(kind, certificate=c)
+            assert _same(kind, got, w), (wname, c)
+            assert _same(kind, w, _host(kind, s, d, N)), (wname, c)
+
+
+def test_ingest_chunk_requires_streamed_live_graph():
+    s, d = gen.random_graph(N, 20, seed=5)
+    ENGINE.load(s, d, N)
+    with pytest.raises(RuntimeError, match="load_stream"):
+        ENGINE.ingest_chunk(s, d)
+
+
+def test_insert_edges_on_streamed_graph_delegates_to_ingest():
+    s, d = gen.random_graph(N, E0, seed=6)
+    ENGINE.load_stream(s[:50], d[:50], N, chunk_edges=CHUNK)
+    got = ENGINE.insert_edges(s[50:], d[50:], kind="bridges")
+    assert got == _host("bridges", s, d, N)
+    assert ENGINE.num_live_graph_edges == E0
+    assert ENGINE._live.stream.chunks_in == -(-50 // CHUNK) + -(-100 // CHUNK)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64),
+       st.sampled_from(ANALYSIS_KINDS))
+def test_streamed_parity_property_random_chunk_sizes(seed, chunk, kind):
+    """Property: ANY chunk size serves the same analysis as one-shot
+    (chunk buckets stay in the {16, 32, 64} family: bounded compiles)."""
+    rng = np.random.default_rng(seed)
+    s, d = gen.random_graph(N, int(rng.integers(5, E0)), seed=seed)
+    ENGINE.load_stream(s, d, N, chunk_edges=chunk)
+    assert _same(kind, ENGINE.current_analysis(kind),
+                 _host(kind, s, d, N))
+
+
+# ------------------------------------------------- zero-retrace contract
+def test_zero_retraces_across_varying_chunk_counts():
+    """After one warm pass, fresh streams and ingest deltas of ANY size
+    (same chunk bucket) reuse the warmed programs — no retrace, the same
+    admission currency as the scheduler's shape buckets."""
+    s, d = gen.random_graph(N, E0, seed=7)
+    ENGINE.load_stream(s[:40], d[:40], N, chunk_edges=CHUNK)
+    ENGINE.ingest_chunk(s[40:70], d[40:70])
+    for kind in ANALYSIS_KINDS:
+        ENGINE.current_analysis(kind)
+    ENGINE.delete_edges(s[:8], d[:8])
+    warm = ENGINE.stats.traces
+    for base, step in ((25, 9), (80, 33), (3, 1)):  # varying chunk counts
+        ENGINE.load_stream(s[:base], d[:base], N, chunk_edges=CHUNK)
+        lo = base
+        while lo < E0:
+            ENGINE.ingest_chunk(s[lo:lo + step], d[lo:lo + step])
+            lo += step
+        for kind in ANALYSIS_KINDS:
+            ENGINE.current_analysis(kind)
+        ENGINE.delete_edges(s[:8], d[:8])
+    assert ENGINE.stats.traces == warm, "streamed steady state retraced"
+
+
+# --------------------------------------------------------- streamed churn
+def test_interleaved_ingest_delete_matches_host_recompute():
+    """Ingest and delete interleaved on one streamed live graph: after
+    every write the engine answers exactly like a host recomputation on
+    the surviving edge multiset (unordered-pair deletion semantics)."""
+    rng = np.random.default_rng(11)
+    s, d = gen.random_graph(N, E0, seed=8)
+    live_s, live_d = list(s[:60]), list(d[:60])
+    ENGINE.load_stream(s[:60], d[:60], N, chunk_edges=CHUNK)
+    lo = 60
+    for turn in range(4):
+        if turn % 2 == 0:  # ingest a delta
+            hi = lo + 25
+            ENGINE.ingest_chunk(s[lo:hi], d[lo:hi])
+            live_s += list(s[lo:hi]); live_d += list(d[lo:hi])
+            lo = hi
+        else:              # delete keys, some certainly in a certificate
+            idx = rng.choice(len(live_s), size=6, replace=False)
+            ks = np.array([live_s[i] for i in idx], np.int32)
+            kd = np.array([live_d[i] for i in idx], np.int32)
+            ENGINE.delete_edges(ks, kd)
+            kset = set(zip(np.minimum(ks, kd).tolist(),
+                           np.maximum(ks, kd).tolist()))
+            keep = [(a, b) for a, b in zip(live_s, live_d)
+                    if (min(a, b), max(a, b)) not in kset]
+            live_s = [a for a, _ in keep]; live_d = [b for _, b in keep]
+        assert ENGINE.num_live_graph_edges == len(live_s)
+        for kind in ("bridges", "cuts", "2ecc"):
+            assert _same(kind, ENGINE.current_analysis(kind),
+                         _host(kind, live_s, live_d, N)), (turn, kind)
+    info = ENGINE.snapshot()["ingest"]
+    assert info["chunk_bucket"] == CHUNK
+    assert info["spilled"] == 60 + 2 * 25
+    assert info["replays"] >= 1  # deletions forced at least one rebuild
+
+
+# --------------------------------------------- sharded shard×chunk drill
+@pytest.mark.parametrize("schedule", ["paper", "xor"])
+def test_sharded_streaming_composes_with_merge(schedule):
+    """Each machine streams its own chunk sequence; the per-shard results
+    compose through the real merge schedule exactly like whole-shard
+    certificates — the multi-device variant of ``load_stream``."""
+    s, d = gen.random_graph(N, E0, seed=9)
+    m = 4
+    psrc, pdst, pmask = partition_edges(s, d, N, m, seed=2)
+    shards = [EdgeList(psrc[i], pdst[i], pmask[i], N) for i in range(m)]
+    merged, streams = simulate_stream_merge_host(shards, CHUNK,
+                                                 schedule=schedule)
+    whole = simulate_merge_host(
+        [get_certificate("2ec").build(sh, capacity=certificate_capacity(N))
+         for sh in shards], schedule)
+    want = _host("bridges", s, d, N)
+    answer_on = [0] if schedule == "paper" else range(m)
+    for i in answer_on:
+        assert _host("bridges", *merged[i].to_numpy(), N) == want
+        assert _host("bridges", *whole[i].to_numpy(), N) == want
+    for i, st_ in enumerate(streams):
+        edges = int(pmask[i].sum())
+        assert st_.chunks_in == -(-edges // CHUNK)
+        assert st_.folds == max(st_.chunks_in, 1)
+
+
+# ------------------------------------------------ memory + checkpointing
+def test_streamed_peak_live_bytes_below_one_shot():
+    s, d = gen.random_graph(N, E0, seed=10)
+    ENGINE.load(s, d, N)
+    for kind in ANALYSIS_KINDS:
+        ENGINE.current_analysis(kind)
+    one_shot = ENGINE.peak_live_bytes
+    ENGINE.load_stream(s, d, N, chunk_edges=CHUNK)
+    for kind in ANALYSIS_KINDS:
+        ENGINE.current_analysis(kind)
+    streamed = ENGINE.peak_live_bytes
+    assert 0 < streamed < one_shot
+    assert ENGINE.live_bytes <= streamed
+    # the gauges publish the same accounting
+    assert get_metrics().gauge("mem/live_bytes").value == ENGINE.live_bytes
+    assert (get_metrics().gauge("mem/peak_live_bytes").value
+            == ENGINE.peak_live_bytes)
+
+
+def test_streamed_live_state_refuses_to_checkpoint(tmp_path):
+    s, d = gen.random_graph(N, 30, seed=12)
+    eng = BridgeEngine()
+    eng.enable_checkpoints(tmp_path, every=1)
+    eng.load_stream(s, d, N, chunk_edges=CHUNK)
+    with pytest.raises(ValueError, match="spill ring"):
+        live_state_tree(eng._live)
+    with pytest.raises(RuntimeError, match="recovery log"):
+        eng.checkpoint_now()
+    # the write clock advanced but the cadence policy never snapshotted
+    eng.ingest_chunk(s[:4], d[:4])
+    assert list(tmp_path.iterdir()) == []
